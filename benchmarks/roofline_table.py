@@ -1,0 +1,45 @@
+"""Render the §Roofline markdown table from reports/*.jsonl dry-run output.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table reports/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def main(paths):
+    rows = []
+    seen = set()
+    for path in paths:
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                key = (r["arch"], r["shape"], r["mesh"],
+                       r.get("note", "").split(" ")[0])
+                if key in seen:
+                    continue
+                seen.add(key)
+                rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+          " dominant | MODEL_FLOPS | useful | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        note = r.get("note", "")
+        topo = "silo" if "cross_silo" in note else "device"
+        step = "fedopt" if "step=fedopt" in note else "safl"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+              f" {fmt(r['compute_s'])} | {fmt(r['memory_s'])} |"
+              f" {fmt(r['collective_s'])} | **{r['dominant']}** |"
+              f" {fmt(r['model_flops'])} | {r['useful_flops_ratio']:.3f} |"
+              f" {step}/{topo} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["reports/dryrun.jsonl"])

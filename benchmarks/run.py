@@ -1,0 +1,197 @@
+"""Benchmark harness -- one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig1_resnet_scratch   : SAFL vs baselines, training-from-scratch regime
+                          (paper Fig. 1, laptop-scale LM stand-in)
+  fig2_finetune         : finetuning regime comparison (paper Fig. 2)
+  fig3_sketch_sizes     : convergence vs sketch size b (paper Fig. 3 / Fig. 6)
+  table1_comm_bits      : per-round uplink bits per algorithm (paper Table 1)
+  fig5_hessian_spectrum : intrinsic dimension of the loss Hessian (Fig. 5)
+  sketch_ops            : raw sk/desk operator throughput (pure-jnp + Pallas)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import functools
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adaptive import AdaConfig
+from repro.core.baselines import (BaselineConfig, baseline_round,
+                                  init_baseline_state, uplink_bits)
+from repro.core.intrinsic_dim import intrinsic_dimension
+from repro.core.safl import SAFLConfig, init_safl, safl_round
+from repro.core.sketch import SketchConfig, sk_leaf, total_sketch_bits
+from repro.data import BigramLMData, LMDataConfig
+from repro.models import ModelConfig, init_params, loss_fn
+
+QUICK = "--quick" in sys.argv
+
+# the paper's three experimental regimes, at laptop scale: a small LM plays
+# the role of ResNet/ViT/BERT (same optimizer/compressor mechanics).
+MODEL = ModelConfig(name="bench", arch_type="dense", num_layers=2,
+                    d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                    vocab_size=128)
+CLIENTS, K, SEQ = 5, 2, 32          # paper: 5 clients, uniform split
+ROUNDS = 10 if QUICK else 60
+BPC = 10                            # batch per client
+
+
+def _timer(fn, *args, reps=3):
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
+           seed: int = 0):
+    """Train the bench model with one algorithm; returns (final_loss,
+    us_per_round, uplink_bits_per_round)."""
+    data = BigramLMData(LMDataConfig(vocab_size=MODEL.vocab_size, seq_len=SEQ,
+                                     num_clients=CLIENTS, seed=seed,
+                                     alpha=0.03))
+    params = init_params(MODEL, jax.random.key(seed))
+    loss = lambda p, b: loss_fn(MODEL, p, b)
+
+    if algo in ("safl", "safl_srht", "safl_gaussian", "fedopt"):
+        kind = {"safl": "countsketch", "safl_srht": "srht",
+                "safl_gaussian": "gaussian", "fedopt": "none"}[algo]
+        cfg = SAFLConfig(
+            sketch=SketchConfig(kind=kind, ratio=sketch_ratio, min_b=8),
+            server=AdaConfig(name="amsgrad", lr=0.01),
+            client_lr=0.5, local_steps=K)
+        state = init_safl(cfg, params)
+        step = jax.jit(functools.partial(safl_round, cfg, loss))
+        bits = total_sketch_bits(cfg.sketch, params)
+        t_us, losses = 0.0, []
+        for t in range(rounds):
+            batch = data.round_batch(BPC, K, t)
+            t0 = time.perf_counter()
+            params, state, m = step(params, state, batch,
+                                    jax.random.key(1000 + t))
+            jax.block_until_ready(m["loss"])
+            t_us += (time.perf_counter() - t0) * 1e6
+            losses.append(float(m["loss"]))
+        return losses[-1], t_us / rounds, bits
+
+    server = {"fedavg": AdaConfig(name="sgd", lr=1.0),
+              "topk_ef": AdaConfig(name="sgd", lr=1.0),
+              "fetchsgd": AdaConfig(name="sgd", lr=1.0),
+              "onebit_adam": AdaConfig(name="adam", lr=0.01),
+              "marina": AdaConfig(name="sgd", lr=0.5),
+              "cocktail": AdaConfig(name="sgd", lr=1.0)}[algo]
+    cfg = BaselineConfig(name=algo, client_lr=0.5, local_steps=K,
+                         server=server, topk_ratio=sketch_ratio,
+                         sketch=SketchConfig(kind="countsketch",
+                                             ratio=sketch_ratio, min_b=8),
+                         onebit_warmup=max(2, rounds // 4))
+    state = init_baseline_state(cfg, params, CLIENTS)
+    step = jax.jit(functools.partial(baseline_round, cfg, loss))
+    t_us, losses = 0.0, []
+    for t in range(rounds):
+        batch = data.round_batch(BPC, K, t)
+        t0 = time.perf_counter()
+        params, state, m = step(params, state, batch, jax.random.key(2000 + t))
+        jax.block_until_ready(m["loss"])
+        t_us += (time.perf_counter() - t0) * 1e6
+        losses.append(float(m["loss"]))
+    return losses[-1], t_us / rounds, uplink_bits(cfg, params)
+
+
+def fig1_resnet_scratch():
+    """Paper Fig. 1: training-from-scratch, SAFL vs compression baselines at
+    matched compression (ratio 0.05)."""
+    for algo in ("safl", "fedopt", "fedavg", "fetchsgd", "topk_ef",
+                 "onebit_adam", "cocktail", "marina"):
+        final, us, bits = _train(algo)
+        print(f"fig1/{algo},{us:.0f},final_loss={final:.4f};uplink_bits={bits}")
+
+
+def fig2_finetune():
+    """Paper Fig. 2: finetuning regime comparison."""
+    for algo in ("safl", "onebit_adam", "fetchsgd"):
+        final, us, bits = _train(algo, seed=7, rounds=(5 if QUICK else 30))
+        print(f"fig2/{algo},{us:.0f},final_loss={final:.4f}")
+
+
+def fig3_sketch_sizes():
+    """Paper Fig. 3/6: convergence vs sketch size (training error monotone
+    in b; tiny b still converges)."""
+    for ratio in (0.01, 0.05, 0.2, 1.0):
+        final, us, bits = _train("safl", sketch_ratio=ratio)
+        print(f"fig3/ratio_{ratio},{us:.0f},final_loss={final:.4f};bits={bits}")
+
+
+def table1_comm_bits():
+    """Paper Table 1: per-round communication bits per algorithm."""
+    params = init_params(MODEL, jax.random.key(0))
+    d = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+    rows = {
+        "fedopt": d * 32,
+        "safl(b=.01d)": total_sketch_bits(
+            SketchConfig(kind="countsketch", ratio=0.01, min_b=8), params),
+    }
+    for name in ("fetchsgd", "topk_ef", "onebit_adam", "marina", "cocktail"):
+        cfg = BaselineConfig(name=name, topk_ratio=0.01,
+                             sketch=SketchConfig(kind="countsketch",
+                                                 ratio=0.01, min_b=8))
+        rows[name] = uplink_bits(cfg, params)
+    for k, v in rows.items():
+        print(f"table1/{k},0,uplink_bits={v};ratio_vs_dense={v / (d * 32):.4f}")
+
+
+def fig5_hessian_spectrum():
+    """Paper Fig. 5 / Assumption 4: intrinsic dimension << ambient dim."""
+    data = BigramLMData(LMDataConfig(vocab_size=MODEL.vocab_size, seq_len=SEQ,
+                                     num_clients=1))
+    params = init_params(MODEL, jax.random.key(0))
+    batch = data.client_batch(0, 16, seed=0)
+    t0 = time.perf_counter()
+    out = intrinsic_dimension(lambda p, b: loss_fn(MODEL, p, b), params,
+                              batch, num_iters=(8 if QUICK else 20),
+                              num_probes=(1 if QUICK else 2))
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"fig5/intrinsic_dim,{us:.0f},"
+          f"I={out['intrinsic_dim']:.1f};ambient_d={out['ambient_dim']};"
+          f"ratio={out['intrinsic_dim'] / out['ambient_dim']:.2e}")
+
+
+def sketch_ops():
+    """Raw operator cost: sk over a 1M-dim vector, jnp vs Pallas route."""
+    n, b = 1 << 20, 1 << 12
+    v = jax.random.normal(jax.random.key(0), (n,))
+    key = jax.random.key(1)
+    for kind in ("countsketch", "srht"):
+        cfg = SketchConfig(kind=kind, ratio=b / n, min_b=b)
+        f = jax.jit(lambda vv: sk_leaf(cfg, key, vv))
+        us = _timer(f, v)
+        print(f"sketch_ops/{kind}_jnp,{us:.0f},n={n};b={b}")
+    from repro.kernels import ops
+    h = jax.random.randint(jax.random.key(2), (n,), 0, b)
+    us = _timer(lambda: ops.countsketch(v, h, b))
+    print(f"sketch_ops/countsketch_pallas_interp,{us:.0f},n={n};b={b}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1_comm_bits()
+    fig3_sketch_sizes()
+    fig1_resnet_scratch()
+    fig2_finetune()
+    fig5_hessian_spectrum()
+    sketch_ops()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, collections
+import repro.launch.roofline as RL
+from repro.launch import dryrun as DR
+import repro.launch.hlo_costs as H
+
+orig = RL.analyze
+cap = {}
+def f(compiled, **kw):
+    cap["t"] = compiled.as_text()
+    return orig(compiled, **kw)
+RL.analyze = f
+DR.lower_one(sys.argv[1], sys.argv[2], multi_pod=False, step_kind="safl",
+             verbose=False, serve_layout=os.environ.get("SERVE_LAYOUT","default"))
+agg = collections.Counter()
+for ln in cap["t"].splitlines():
+    m = H._OP_LINE.match(ln)
+    if not m: continue
+    rhs = m.group(2)
+    if " all-gather(" in rhs or " all-gather-start(" in rhs:
+        idx = rhs.index(" all-gather")
+        b = H._all_shapes_bytes(rhs[:idx])
+        om = re.search(r'op_name="([^"]*)"', rhs)
+        frame = re.search(r'stack_frame_id=(\d+)', rhs)
+        agg[(rhs[:60], om.group(1)[:90] if om else "?")] += b
+for (shape, tag), b in agg.most_common(8):
+    print(f"{b/1e9:8.3f} GB  {shape}\n           {tag}")

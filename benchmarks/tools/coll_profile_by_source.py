@@ -1,0 +1,91 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, collections
+import jax
+from repro.launch import dryrun as DR
+from repro.launch import hlo_costs as HC
+
+arch, shape = sys.argv[1], sys.argv[2]
+step = sys.argv[3] if len(sys.argv) > 3 else "safl"
+
+# monkeypatch analyze to capture hlo text
+import repro.launch.roofline as RL
+orig = RL.analyze
+captured = {}
+def cap(compiled, **kw):
+    captured["hlo"] = compiled.as_text()
+    return orig(compiled, **kw)
+RL.analyze = cap
+import os as _os
+kw = {}
+if _os.environ.get("SERVE_LAYOUT"): kw["serve_layout"] = _os.environ["SERVE_LAYOUT"]
+if _os.environ.get("TOPOLOGY"): kw["topology"] = _os.environ["TOPOLOGY"]
+rep, _ = DR.lower_one(arch, shape, multi_pod=False, step_kind=step, verbose=False, **kw)
+print(f"== {arch} x {shape} [{step}]  coll={rep.collective_s:.3f}s comp={rep.compute_s:.3f}s mem={rep.memory_s:.3f}s")
+
+text = captured["hlo"]
+# reuse the computation-multiplier machinery
+import repro.launch.hlo_costs as H
+comps = {}
+cur = None
+for line in text.splitlines():
+    if (line and not line.startswith(" ") and "->" in line and line.rstrip().endswith("{")
+            and (line.startswith("%") or line.startswith("ENTRY"))):
+        tok = line.split()[1] if line.startswith("ENTRY") else line.split()[0]
+        cur = tok.lstrip("%"); comps[cur] = []
+        continue
+    if line.startswith("}"): cur = None; continue
+    if cur is not None: comps[cur].append(line)
+children = collections.defaultdict(list)
+fusion = set()
+for name, lines in comps.items():
+    for ln in lines:
+        m = H._OP_LINE.match(ln)
+        if not m: continue
+        rhs = m.group(2)
+        if " while(" in rhs:
+            trips = 1.0
+            tm = H._TRIP.search(rhs)
+            if tm: trips = float(tm.group(1))
+            bm = re.search(r"body=%?([\w\.\-]+)", rhs)
+            cm = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            if bm: children[name].append((bm.group(1), trips))
+            if cm: children[name].append((cm.group(1), trips))
+        elif " fusion(" in rhs:
+            fm = re.search(r"calls=%?([\w\.\-]+)", rhs)
+            if fm: fusion.add(fm.group(1))
+        elif " call(" in rhs:
+            fm = re.search(r"to_apply=%?([\w\.\-]+)", rhs)
+            if fm: children[name].append((fm.group(1), 1.0))
+ref = {c for l in children.values() for c,_ in l} | fusion
+mult = collections.defaultdict(float)
+def walk(c, m):
+    mult[c] += m
+    for ch, k in children.get(c, []): walk(ch, m*k)
+for e in [c for c in comps if c not in ref]: walk(e, 1.0)
+
+agg = collections.Counter()
+for name, lines in comps.items():
+    w = mult.get(name, 0.0)
+    if w == 0: continue
+    for ln in lines:
+        m = H._OP_LINE.match(ln)
+        if not m: continue
+        rhs = m.group(2)
+        for kind in H.COLL_KINDS:
+            hit = None
+            for form in (f" {kind}(", f" {kind}-start("):
+                if form in rhs: hit = form; break
+            if not hit: continue
+            b = H._all_shapes_bytes(rhs[:rhs.index(hit)])
+            om = re.search(r'op_name="([^"]*)"', rhs)
+            tag = om.group(1) if om else "?"
+            # collapse tag to a compact source label
+            tag = re.sub(r"/closed_call", "", tag)
+            tag = re.sub(r"\.[0-9]+", "", tag)
+            parts = [p for p in tag.split("/") if p not in ("jit(step)","while","body","checkpoint")][:6]
+            agg["/".join(parts) + f" [{kind}]"] += int(w*b)
+total = sum(agg.values())
+print(f"total collective bytes/device: {total/1e9:.2f} GB")
+for tag, b in agg.most_common(18):
+    print(f"  {b/1e9:9.3f} GB  {tag}")

@@ -1,0 +1,56 @@
+"""Heavy-tailed client noise: clipped SAFL vs plain SAFL (paper §2 noise
+discussion / Chezhegov et al. 2024 — adaptive methods need clipping under
+heavy tails).
+
+    PYTHONPATH=src python examples/heavy_tail.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adaptive import AdaConfig
+from repro.core.clipped import ClippedSAFLConfig, clipped_safl_round
+from repro.core.safl import SAFLConfig, init_safl, safl_round
+from repro.core.sketch import SketchConfig
+
+key = jax.random.key(0)
+W_true = jax.random.normal(jax.random.fold_in(key, 1), (32, 4))
+
+
+def make_batch(seed, n=64, tail=1.2):
+    """Regression with Pareto(alpha=1.2) label noise: INFINITE variance —
+    the genuinely heavy-tailed regime where unclipped adaptive methods
+    suffer."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 32)).astype(np.float32)
+    noise = (rng.pareto(tail, size=(n, 4)) * rng.choice([-1, 1], (n, 4)))
+    y = x @ np.asarray(W_true) + 0.5 * noise.astype(np.float32)
+    b = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+    return jax.tree.map(lambda v: v.reshape(4, 2, 8, *v.shape[1:]), b)
+
+
+def loss_fn(p, b):
+    return jnp.mean((b["x"] @ p["W"] - b["y"]) ** 2)
+
+
+base = SAFLConfig(sketch=SketchConfig(kind="countsketch", ratio=0.5, min_b=8),
+                  server=AdaConfig(name="amsgrad", lr=0.05),
+                  client_lr=0.05, local_steps=2)
+
+for name, tau in [("plain SAFL", None), ("clipped SAFL tau=0.5", 0.5)]:
+    params = {"W": jnp.zeros((32, 4))}
+    opt = init_safl(base, params)
+    if tau is None:
+        step = jax.jit(functools.partial(safl_round, base, loss_fn))
+    else:
+        ccfg = ClippedSAFLConfig(base=base, clip_tau=tau)
+        step = jax.jit(functools.partial(clipped_safl_round, ccfg, loss_fn))
+    errs = []
+    for t in range(150):
+        params, opt, m = step(params, opt, make_batch(t), jax.random.key(t))
+        errs.append(float(jnp.mean((params["W"] - W_true) ** 2)))
+    print(f"{name:24s} param-MSE: start {errs[0]:.3f}  "
+          f"mid {errs[75]:.3f}  final {errs[-1]:.4f}")
+print("clipping should give a lower, more stable final parameter error")

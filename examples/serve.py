@@ -1,0 +1,34 @@
+"""Serve a small model with batched greedy decoding through the KV-cache
+decode path (the same decode_step the production dry-run lowers).
+
+    PYTHONPATH=src python examples/serve.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step, init_cache, init_params
+
+model = ModelConfig(name="serve", arch_type="dense", num_layers=4,
+                    d_model=256, num_heads=8, num_kv_heads=4, d_ff=512,
+                    vocab_size=1024, sliding_window=64)
+params = init_params(model, jax.random.key(0))
+
+BATCH, STEPS, MAXSEQ = 8, 48, 64
+cache = init_cache(model, BATCH, MAXSEQ)
+step = jax.jit(lambda p, c, t, i: decode_step(model, p, c, t, i))
+
+tokens = jax.random.randint(jax.random.key(1), (BATCH, 1), 0, 1024)
+out = [tokens]
+t0 = time.perf_counter()
+for i in range(STEPS):
+    logits, cache = step(params, cache, tokens, jnp.asarray(i, jnp.int32))
+    tokens = jnp.argmax(logits, axis=-1)[:, None]
+    out.append(tokens)
+dt = time.perf_counter() - t0
+seqs = jnp.concatenate(out, axis=1)
+print(f"decoded {BATCH} x {STEPS} tokens in {dt:.2f}s "
+      f"({BATCH * STEPS / dt:.0f} tok/s on CPU, ring-buffered SWA cache)")
+print("first sequence:", seqs[0, :16].tolist(), "...")
+assert bool(jnp.isfinite(logits).all())

@@ -1,0 +1,67 @@
+"""Checkpointing: exact pytree round-trip via npz + structure manifest."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _paths(tree: Pytree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spath = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path)
+        out.append((spath, leaf))
+    return out
+
+
+def save_checkpoint(path: str, tree: Pytree, step: int = 0) -> None:
+    """Save a pytree (params/opt state/server moments) to ``path``.npz."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    arrays = {}
+    manifest = {"step": step, "leaves": []}
+    for i, (spath, leaf) in enumerate(_paths(tree)):
+        key = f"a{i}"
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                             np.uint32, np.int16, np.uint8, np.int8,
+                             np.bool_, np.float16, np.uint64, np.uint16):
+            arr = arr.astype(np.float32)   # bf16 & friends: store widened
+        arrays[key] = arr
+        manifest["leaves"].append(
+            {"path": spath, "key": key, "dtype": dtype})
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore_checkpoint(path: str, like: Pytree) -> tuple[Pytree, int]:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    saved = {l["path"]: data[l["key"]] for l in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathk, leaf in flat:
+        spath = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in pathk)
+        if spath not in saved:
+            raise KeyError(f"checkpoint missing leaf {spath}")
+        arr = saved[spath]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {spath}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, manifest["step"]

@@ -1,0 +1,119 @@
+"""Architecture registry + input-shape table + ShapeDtypeStruct specs.
+
+Every assigned architecture is a module exposing ``CONFIG`` (the exact
+published configuration, source cited in ``ModelConfig.source``) and
+``SMOKE`` (a reduced same-family variant: <=2 scan blocks, d_model<=512,
+<=4 experts) for the CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "falcon_mamba_7b",
+    "whisper_large_v3",
+    "jamba_1_5_large_398b",
+    "qwen2_vl_7b",
+    "h2o_danube_1_8b",
+    "llama3_2_1b",
+    "qwen1_5_4b",
+    "deepseek_v3_671b",
+    "qwen2_7b",
+    "dbrx_132b",
+    # the paper's own experimental backbones (§5), LM-adapted
+    "bert_100m",
+    "vit_base_86m",
+]
+
+ASSIGNED = ARCHS[:10]
+
+# canonical ids with dashes, as in the assignment table
+def canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524288, 1,   "decode"),
+}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def long_context_eligible(cfg: ModelConfig) -> bool:
+    """long_500k needs sub-quadratic attention (DESIGN §4): SSM, hybrid, or
+    native sliding-window.  Pure full-attention archs are skipped."""
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return True
+    return cfg.sliding_window > 0
+
+
+def shape_eligible(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and not long_context_eligible(cfg):
+        return False, "SKIP(full-attention: no sub-quadratic variant)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, num_clients: int = 16,
+                local_steps: int = 1) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    from repro.models.model import cache_shapes, _cache_dtype  # lazy import
+    sh = INPUT_SHAPES[shape]
+    f = lambda s, d=jnp.int32: jax.ShapeDtypeStruct(tuple(s), d)
+    P = cfg.num_frontend_tokens if cfg.frontend == "vision" else 0
+
+    if sh.kind == "train":
+        g, k = num_clients, local_steps
+        assert sh.global_batch % (g * k) == 0
+        mb = sh.global_batch // (g * k)
+        batch = {"tokens": f((g, k, mb, sh.seq_len - P))}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = f((g, k, mb, P, cfg.d_model), cfg.dtype)
+        if cfg.frontend == "audio":
+            batch["audio_embeds"] = f((g, k, mb, cfg.encoder_seq, cfg.d_model),
+                                      cfg.dtype)
+        return {"batch": batch}
+
+    if sh.kind == "prefill":
+        b = sh.global_batch
+        batch = {"tokens": f((b, sh.seq_len - P))}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = f((b, P, cfg.d_model), cfg.dtype)
+        if cfg.frontend == "audio":
+            batch["audio_embeds"] = f((b, cfg.encoder_seq, cfg.d_model),
+                                      cfg.dtype)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len-deep cache
+    b = sh.global_batch
+    shapes = cache_shapes(cfg, b, sh.seq_len)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    leaves = []
+    for path, s in flat:
+        spath = "/".join(str(getattr(k2, "key", k2)) for k2 in path)
+        leaves.append(f(s, _cache_dtype(cfg, spath)))
+    cache = jax.tree_util.tree_unflatten(treedef, leaves)
+    return {"cache": cache, "tokens": f((b, 1)),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

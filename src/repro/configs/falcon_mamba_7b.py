@@ -1,0 +1,16 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 attention-free Mamba-1,
+ssm_state=16, vocab=65024.  [arXiv:2410.05355]"""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", arch_type="ssm",
+    num_layers=64, d_model=4096, vocab_size=65024,
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+    dtype=jnp.bfloat16, source="arXiv:2410.05355",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=128, vocab_size=256, ssm_state=8,
+    dtype=jnp.float32)

@@ -1,0 +1,6 @@
+from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
+from repro.core.safl import (SAFLConfig, client_delta, fedopt_round, init_safl,
+                             safl_round, split_client_batches,
+                             uplink_bits_per_round)
+from repro.core.sketch import (SketchConfig, desketch_tree, leaf_sketch_size,
+                               roundtrip_tree, sketch_tree, total_sketch_bits)

@@ -1,0 +1,311 @@
+"""Communication-efficient FL baselines the paper compares against (§5, Table 1).
+
+All baselines share the SAFL round interface:
+    round(cfg, loss_fn, params, state, batch(G, K, mb, ...), key)
+        -> (params, state, metrics)
+
+Implemented:
+  * ``fedavg``      -- plain local-SGD averaging (uncompressed, server SGD)
+  * ``fedopt``      -- uncompressed adaptive server (Reddi et al. 2020); the
+                       paper's "ambient dimension" reference (in safl.py)
+  * ``topk_ef``     -- Top-K sparsification + client error feedback
+                       (Stich et al. 2018)
+  * ``fetchsgd``    -- Count-Sketch uplink, server sketch-momentum + sketch
+                       error accumulation + heavy-hitter Top-K unsketch
+                       (Rothchild et al. 2020)
+  * ``onebit_adam`` -- Adam warmup, then frozen-variance sign compression
+                       with error feedback (Tang et al. 2021)
+  * ``marina``      -- unbiased compressed gradient differences with periodic
+                       full sync (Gorbunov et al. 2021a), Rand-K compressor
+  * ``cocktail``    -- simplified CocktailSGD (Wang et al. 2023): Rand-K then
+                       sign quantization, wrapped in error feedback.  (The
+                       full pipeline also stages top-k; we document this
+                       simplification in EXPERIMENTS.md.)
+
+These run in the paper-scale simulation path (C clients on one device) for
+the convergence benchmarks; ``fedopt`` and ``safl`` additionally run on the
+production mesh where their O(d) vs O(b) collectives are rooflined.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
+from repro.core.safl import SAFLConfig, client_delta
+from repro.core.sketch import SketchConfig, desk_leaf, sk_leaf
+
+Pytree = Any
+LossFn = Callable[[Pytree, Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    name: str = "fedavg"
+    client_lr: float = 0.1
+    local_steps: int = 1
+    server: AdaConfig = AdaConfig(name="sgd", lr=1.0)
+    # compression knobs
+    topk_ratio: float = 0.01        # fraction of coords kept (topk/randk)
+    sketch: SketchConfig = SketchConfig(kind="countsketch", ratio=0.01)
+    fetchsgd_momentum: float = 0.9
+    fetchsgd_shrink: float = 0.0    # heavy-hitter shrinkage; 0 = auto (b/n)
+    onebit_warmup: int = 10
+    marina_p: float = 0.1           # prob of full-gradient sync round
+    seed_tag: int = 0
+
+
+# --------------------------------------------------------------------------
+# compressors (per flat vector)
+# --------------------------------------------------------------------------
+
+def topk_mask(v: jax.Array, k: int) -> jax.Array:
+    """Dense mask keeping the k largest-|.| entries (biased, contractive)."""
+    k = max(1, min(k, v.shape[0]))
+    thresh = jax.lax.top_k(jnp.abs(v), k)[0][-1]
+    return jnp.where(jnp.abs(v) >= thresh, v, 0.0)
+
+
+def randk_unbiased(key: jax.Array, v: jax.Array, k: int) -> jax.Array:
+    """Unbiased Rand-K: keep k random coords scaled by n/k (omega = n/k - 1)."""
+    n = v.shape[0]
+    k = max(1, min(k, n))
+    idx = jax.random.choice(key, n, (k,), replace=False)
+    mask = jnp.zeros((n,), v.dtype).at[idx].set(1.0)
+    return v * mask * (n / k)
+
+
+def sign_quant(v: jax.Array) -> jax.Array:
+    """1-bit sign quantization with l1 scale (1bit-Adam / signSGD style)."""
+    return jnp.sign(v) * jnp.mean(jnp.abs(v))
+
+
+def _per_leaf(fn, tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fn(i, l.reshape(-1)).reshape(l.shape)
+                  for i, l in enumerate(leaves)])
+
+
+# --------------------------------------------------------------------------
+# state
+# --------------------------------------------------------------------------
+
+def init_baseline_state(cfg: BaselineConfig, params: Pytree, num_clients: int) -> dict:
+    f32 = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    state = {"opt": init_opt_state(cfg.server, params),
+             "round": jnp.zeros((), jnp.int32)}
+    if cfg.name in ("topk_ef", "onebit_adam", "cocktail", "cdadam"):
+        # per-client error memories
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros((num_clients,) + p.shape, jnp.float32), params)
+    if cfg.name == "fetchsgd":
+        from repro.core.sketch import leaf_sketch_size
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        state["sk_mom"] = jax.tree_util.tree_unflatten(
+            treedef, [jnp.zeros(
+                (leaf_sketch_size(int(jnp.size(l)), cfg.sketch),),
+                jnp.float32) for l in leaves])
+        state["sk_err"] = jax.tree.map(jnp.zeros_like, state["sk_mom"])
+    if cfg.name == "marina":
+        state["g"] = f32(params)
+        state["prev_params"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    if cfg.name == "onebit_adam":
+        state["v_frozen"] = f32(params)
+    return state
+
+
+def _deltas_and_losses(cfg: BaselineConfig, loss_fn, params, batch, eta):
+    scfg = SAFLConfig(client_lr=cfg.client_lr, local_steps=cfg.local_steps)
+    return jax.vmap(lambda mb: client_delta(scfg, loss_fn, params, mb, eta))(batch)
+
+
+# --------------------------------------------------------------------------
+# rounds
+# --------------------------------------------------------------------------
+
+def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
+                   state: dict, batch: Pytree, key: jax.Array
+                   ) -> tuple[Pytree, dict, dict]:
+    eta = jnp.asarray(cfg.client_lr, jnp.float32)
+    rnd = state["round"]
+    deltas, losses = _deltas_and_losses(cfg, loss_fn, params, batch, eta)
+    metrics = {"loss": jnp.mean(losses)}
+    G = jax.tree.leaves(deltas)[0].shape[0]
+
+    if cfg.name == "fedavg" or cfg.name == "fedopt":
+        update = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
+
+    elif cfg.name in ("topk_ef", "cocktail", "cdadam"):
+        def compress(i, flat):  # flat: (G, n) -- per-client compressor + EF
+            k = max(1, int(flat.shape[1] * cfg.topk_ratio))
+            if cfg.name == "cocktail":
+                def comp_one(g, v):
+                    kk = jax.random.fold_in(jax.random.fold_in(key, i), g)
+                    # biased Rand-K (no n/k inflation -- EF absorbs the bias)
+                    n = v.shape[0]
+                    idx = jax.random.choice(kk, n, (k,), replace=False)
+                    mask = jnp.zeros((n,), v.dtype).at[idx].set(1.0)
+                    sparse = v * mask
+                    # sign-quantize the survivors (scale = mean |.| over k)
+                    scale = jnp.sum(jnp.abs(sparse)) / k
+                    return jnp.sign(sparse) * scale
+                comp = jax.vmap(lambda g, v: comp_one(g, v))(
+                    jnp.arange(G), flat)
+            else:
+                comp = jax.vmap(lambda v: topk_mask(v, k))(flat)
+            return comp
+
+        err_leaves, treedef = jax.tree_util.tree_flatten(state["err"])
+        d_leaves = jax.tree_util.tree_leaves(deltas)
+        new_err, comp_mean = [], []
+        for i, (e, d) in enumerate(zip(err_leaves, d_leaves)):
+            a = (e + d).reshape(G, -1)
+            c = compress(i, a)
+            new_err.append((a - c).reshape(e.shape))
+            comp_mean.append(jnp.mean(c, axis=0).reshape(e.shape[1:]))
+        state["err"] = jax.tree_util.tree_unflatten(treedef, new_err)
+        update = jax.tree_util.tree_unflatten(treedef, comp_mean)
+        params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
+
+    elif cfg.name == "fetchsgd":
+        skcfg = cfg.sketch
+        d_leaves, treedef = jax.tree_util.tree_flatten(deltas)
+        mom_leaves = jax.tree_util.tree_leaves(state["sk_mom"])
+        errl = jax.tree_util.tree_leaves(state["sk_err"])
+        p_leaves = jax.tree_util.tree_leaves(params)
+        new_mom, new_err, upds = [], [], []
+        # NOTE: canonical FetchSGD keeps ONE fixed sketch so momentum/error
+        # accumulate coherently -- but that variant provably relies on the
+        # heavy-hitter assumption (paper Table 1 note (A)); on dense
+        # (non-heavy-hitter) gradients the fixed-hash aliasing is a positive
+        # feedback loop and it diverges (we verified: see EXPERIMENTS.md
+        # §Baselines).  We therefore re-key the sketch each round: the
+        # sketch-space accumulators then act as unbiased compressed momentum
+        # + error smoothing, which is stable without heavy hitters.
+        for i, (d, mom, er, p) in enumerate(zip(d_leaves, mom_leaves, errl, p_leaves)):
+            kl = jax.random.fold_in(key, i)
+            n = int(jnp.size(p))
+            # clients sketch; server averages sketches (mergeable)
+            sks = jax.vmap(lambda v: sk_leaf(skcfg, kl, v.reshape(-1)))(d)
+            s_mean = jnp.mean(sks, axis=0)
+            mom = cfg.fetchsgd_momentum * mom + s_mean
+            er = er + mom
+            dense = desk_leaf(skcfg, kl, er, n)             # unsketch error acc
+            k = max(1, int(n * cfg.topk_ratio))
+            # top-k selection on a desketch picks upward-biased coordinates;
+            # shrink by ~b/n so the applied mass matches the true signal
+            # (without this the EF loop is a positive feedback on dense,
+            # non-heavy-hitter gradients -- see EXPERIMENTS.md §Baselines)
+            shrink = cfg.fetchsgd_shrink or min(1.0, mom.shape[0] / n)
+            upd = topk_mask(dense, k) * shrink               # heavy hitters
+            er = er - sk_leaf(skcfg, kl, upd)                # subtract extracted
+            new_mom.append(mom); new_err.append(er)
+            upds.append(upd.reshape(p.shape))
+        state["sk_mom"] = jax.tree_util.tree_unflatten(treedef, new_mom)
+        state["sk_err"] = jax.tree_util.tree_unflatten(treedef, new_err)
+        update = jax.tree_util.tree_unflatten(treedef, upds)
+        params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
+
+    elif cfg.name == "onebit_adam":
+        mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        warm = rnd < cfg.onebit_warmup
+
+        def warm_branch(op):
+            params_, state_ = op
+            p2, opt2 = apply_update(cfg.server, state_["opt"], params_, mean_delta)
+            # track variance to freeze at warmup end
+            vf = jax.tree.map(
+                lambda v, u: cfg.server.beta2 * v + (1 - cfg.server.beta2) * u * u,
+                state_["v_frozen"], mean_delta)
+            return p2, {**state_, "opt": opt2, "v_frozen": vf}
+
+        def comp_branch(op):
+            params_, state_ = op
+            # per-client sign compression with EF
+            a = jax.tree.map(lambda e, d: e + d, state_["err"], deltas)
+            c = jax.tree.map(lambda t: jax.vmap(
+                lambda v: sign_quant(v.reshape(-1)).reshape(v.shape))(t), a)
+            err2 = jax.tree.map(lambda x, y: x - y, a, c)
+            u = jax.tree.map(lambda t: jnp.mean(t, axis=0), c)
+            m2 = jax.tree.map(
+                lambda m, ui: cfg.server.beta1 * m + (1 - cfg.server.beta1) * ui,
+                state_["opt"]["m"], u)
+            dirn = jax.tree.map(
+                lambda m, v: m / (jnp.sqrt(v) + cfg.server.eps),
+                m2, state_["v_frozen"])
+            p2 = jax.tree.map(lambda p, d: (p - cfg.server.lr * d).astype(p.dtype),
+                              params_, dirn)
+            opt2 = {**state_["opt"], "m": m2,
+                    "step": state_["opt"]["step"] + 1}
+            return p2, {**state_, "opt": opt2, "err": err2}
+
+        params, state = jax.lax.cond(warm, warm_branch, comp_branch,
+                                     (params, state))
+
+    elif cfg.name == "marina":
+        # gradient-difference compression; clients evaluate grads at x_t and
+        # x_{t-1} on the same minibatch (K=1 semantics: delta/eta = grad)
+        grads = jax.tree.map(lambda d: d / eta, deltas)     # (G, shape)
+        scfg = SAFLConfig(client_lr=cfg.client_lr, local_steps=cfg.local_steps)
+        prev_p = state["prev_params"]
+        prev_deltas, _ = jax.vmap(
+            lambda mb: client_delta(scfg, loss_fn, prev_p, mb, eta))(batch)
+        prev_grads = jax.tree.map(lambda d: d / eta, prev_deltas)
+        full_round = jax.random.bernoulli(key, cfg.marina_p)
+
+        def full_fn(_):
+            return jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+
+        def diff_fn(_):
+            def comp_leaf(i, diff_flat):  # (G, n)
+                k = max(1, int(diff_flat.shape[1] * cfg.topk_ratio))
+                return jax.vmap(lambda g, v: randk_unbiased(
+                    jax.random.fold_in(jax.random.fold_in(key, i), g), v, k))(
+                        jnp.arange(G), diff_flat)
+            diffs = jax.tree.map(lambda g, pg: g - pg, grads, prev_grads)
+            leaves, treedef = jax.tree_util.tree_flatten(diffs)
+            out = []
+            for i, l in enumerate(leaves):
+                c = comp_leaf(i, l.reshape(l.shape[0], -1)).reshape(l.shape)
+                out.append(jnp.mean(c, axis=0))
+            q = jax.tree_util.tree_unflatten(treedef, out)
+            return jax.tree.map(lambda g0, qi: g0 + qi, state["g"], q)
+
+        g_new = jax.lax.cond(full_round, full_fn, diff_fn, None)
+        state["g"] = g_new
+        state["prev_params"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        params, state["opt"] = apply_update(cfg.server, state["opt"], params, g_new)
+
+    else:
+        raise ValueError(f"unknown baseline {cfg.name}")
+
+    state["round"] = rnd + 1
+    return params, state, metrics
+
+
+def uplink_bits(cfg: BaselineConfig, params: Pytree) -> int:
+    """Approximate per-client uplink bits per round, for Table 1 parity."""
+    n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+    if cfg.name in ("fedavg", "fedopt"):
+        return n * 32
+    if cfg.name in ("topk_ef", "cdadam"):
+        k = int(n * cfg.topk_ratio)
+        return k * (32 + 32)  # value + index
+    if cfg.name == "cocktail":
+        k = int(n * cfg.topk_ratio)
+        return k * (1 + 32)   # sign bit + index
+    if cfg.name == "fetchsgd":
+        from repro.core.sketch import total_sketch_bits
+        return total_sketch_bits(cfg.sketch, params)
+    if cfg.name == "onebit_adam":
+        return n * 1
+    if cfg.name == "marina":
+        k = int(n * cfg.topk_ratio)
+        return int(cfg.marina_p * n * 32 + (1 - cfg.marina_p) * k * 64)
+    raise ValueError(cfg.name)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (BigramLMData, ClsDataConfig, GaussianClsData,
+                                  LMDataConfig, synthetic_lm_batch)

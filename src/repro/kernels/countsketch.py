@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: Count-Sketch aggregation (sk of paper Lemma A.3).
+
+TPU adaptation (DESIGN.md §2): TPUs have no fast scatter, so the classic
+``out[h[i]] += s[i] * v[i]`` loop is reformulated as a tile-local one-hot
+matmul that runs on the MXU:
+
+    for each tile of T input elements:
+        onehot[T, b] = (h_tile[:, None] == iota_b[None, :])
+        out[b]      += x_tile[T] @ onehot          # MXU matmul
+
+The (T, b) one-hot tile lives in VMEM; the (b,) accumulator is revisited by
+every grid step (TPU grid is sequential over the last axis, so accumulation
+into the same output block is well-defined).
+
+Input ``x`` is the sign-multiplied vector ``v * s`` (signs applied by the
+caller so the kernel is a pure semantic of "segment-sum with hash h").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile of input elements processed per grid step. 8*128-aligned for the VPU;
+# the (TILE_N, b) one-hot at b=2048 is 8 MiB fp32 -> we matmul in bf16-free
+# fp32 which still fits comfortably in 16 MiB VMEM for b <= 2048 per call;
+# larger b is split by the wrapper in ops.py.
+TILE_N = 1024
+
+
+def _countsketch_kernel(x_ref, h_ref, o_ref, *, b: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (1, TILE_N) f32
+    h = h_ref[...]  # (1, TILE_N) i32
+    cols = jax.lax.broadcasted_iota(jnp.int32, (TILE_N, b), 1)
+    onehot = (h.reshape(TILE_N, 1) == cols).astype(x.dtype)  # (TILE_N, b)
+    o_ref[...] += jnp.dot(x, onehot, preferred_element_type=jnp.float32)
+
+
+def countsketch_pallas(x: jax.Array, h: jax.Array, b: int, *,
+                       interpret: bool = True) -> jax.Array:
+    """Count-sketch ``segment_sum(x, h, b)`` via the Pallas kernel.
+
+    x: (n,) float32 (already sign-multiplied), h: (n,) int32 in [0, b).
+    """
+    n = x.shape[0]
+    n_pad = ((n + TILE_N - 1) // TILE_N) * TILE_N
+    # pad x with zeros -> padded elements contribute nothing wherever hashed
+    xp = jnp.pad(x.astype(jnp.float32), (0, n_pad - n)).reshape(1, n_pad)
+    hp = jnp.pad(h.astype(jnp.int32), (0, n_pad - n)).reshape(1, n_pad)
+    grid = (n_pad // TILE_N,)
+    out = pl.pallas_call(
+        functools.partial(_countsketch_kernel, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_N), lambda i: (0, i)),
+            pl.BlockSpec((1, TILE_N), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, b), jnp.float32),
+        interpret=interpret,
+    )(xp, hp)
+    return out.reshape(b)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fast Walsh-Hadamard transform (SRHT backbone).
+
+TPU adaptation (DESIGN.md §2): the FWHT is memory-bound and MXU-hostile, so
+we run it on the VPU with all butterflies of a row resident in VMEM.  A
+length-n transform (n = n1 * n2 power of two) uses the Kronecker identity
+
+    H_n = H_{n1} (x) H_{n2}    =>    FWHT(x) = H_{n1} X H_{n2}
+
+with X = x.reshape(n1, n2):  pass 1 applies H_{n2} along rows, pass 2 applies
+H_{n1} along rows of X^T.  Each kernel call transforms a (ROWS_PER_BLOCK, C)
+tile fully inside VMEM with log2(C) unrolled butterfly stages.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8          # rows transformed per grid step
+MAX_C = 4096           # max per-row transform length held in VMEM
+
+
+def _fwht_rows_kernel(x_ref, o_ref, *, c: int):
+    """FWHT along the last axis of a (ROW_BLOCK, c) tile, fully in VMEM."""
+    x = x_ref[...]
+    rows = x.shape[0]
+    h = 1
+    while h < c:
+        x = x.reshape(rows, c // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)  # (rows, pairs, 2h)
+        x = x.reshape(rows, c)
+        h *= 2
+    o_ref[...] = x
+
+
+def fwht_rows_pallas(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Unnormalized FWHT along the last axis of (R, C); C a power of 2."""
+    r, c = x.shape
+    assert c & (c - 1) == 0 and c <= MAX_C
+    r_pad = ((r + ROW_BLOCK - 1) // ROW_BLOCK) * ROW_BLOCK
+    xp = jnp.pad(x.astype(jnp.float32), ((0, r_pad - r), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_fwht_rows_kernel, c=c),
+        grid=(r_pad // ROW_BLOCK,),
+        in_specs=[pl.BlockSpec((ROW_BLOCK, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_BLOCK, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, c), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:r]
+
+
+def fwht_pallas(v: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Unnormalized FWHT of a 1-D vector whose length is a power of 2."""
+    (n,) = v.shape
+    assert n & (n - 1) == 0
+    if n <= MAX_C:
+        return fwht_rows_pallas(v.reshape(1, n), interpret=interpret).reshape(n)
+    # factor n = n1 * n2 with n2 <= MAX_C (two-level Kronecker covers n <= 16M)
+    n2 = MAX_C
+    n1 = n // n2
+    assert n1 <= MAX_C, "fwht_pallas supports n <= MAX_C**2 (16M)"
+    xm = v.reshape(n1, n2)
+    xm = fwht_rows_pallas(xm, interpret=interpret)          # H_{n2} along rows
+    xm = fwht_rows_pallas(xm.T, interpret=interpret).T      # H_{n1} along cols
+    return xm.reshape(n)

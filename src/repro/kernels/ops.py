@@ -1,0 +1,43 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on a
+real TPU backend they compile through Mosaic.  ``repro.core.sketch`` routes
+through these when ``SketchConfig.use_pallas`` is set.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.countsketch import countsketch_pallas
+from repro.kernels.fwht import fwht_pallas
+from repro.kernels.gaussian_sketch import gaussian_desk_pallas, gaussian_sk_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("b",))
+def countsketch(x: jax.Array, h: jax.Array, b: int) -> jax.Array:
+    """Count-sketch aggregation: out[j] = sum_{h[i]==j} x[i]."""
+    return countsketch_pallas(x, h, b, interpret=_interpret())
+
+
+@jax.jit
+def fwht(v: jax.Array) -> jax.Array:
+    """Unnormalized fast Walsh-Hadamard transform of a pow2-length vector."""
+    return fwht_pallas(v, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("b",))
+def gaussian_sk(seed: jax.Array, x: jax.Array, b: int) -> jax.Array:
+    return gaussian_sk_pallas(seed, x, b, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("n",))
+def gaussian_desk(seed: jax.Array, s: jax.Array, n: int) -> jax.Array:
+    return gaussian_desk_pallas(seed, s, n, interpret=_interpret())

@@ -1,0 +1,74 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel (allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def countsketch_ref(x: jax.Array, h: jax.Array, b: int) -> jax.Array:
+    """Oracle for kernels/countsketch.py: plain segment sum."""
+    return jax.ops.segment_sum(x.astype(jnp.float32), h, num_segments=b)
+
+
+def fwht_ref(x: np.ndarray) -> np.ndarray:
+    """Oracle for kernels/fwht.py: textbook in-place butterfly, float64."""
+    x = np.asarray(x, dtype=np.float64).copy()
+    n = x.shape[-1]
+    h = 1
+    while h < n:
+        for i in range(0, n, h * 2):
+            for j in range(i, i + h):
+                a = x[..., j].copy()
+                b = x[..., j + h].copy()
+                x[..., j] = a + b
+                x[..., j + h] = a - b
+        h *= 2
+    return x
+
+
+def gaussian_tile_ref(seed: int, tile: int, tile_n: int, b: int) -> np.ndarray:
+    """Oracle for the in-kernel counter PRNG: same splitmix32 + Box-Muller
+    evaluated with numpy uint32 arithmetic."""
+    rows, cols = np.meshgrid(np.arange(tile_n, dtype=np.uint64),
+                             np.arange(b, dtype=np.uint64), indexing="ij")
+    base = (np.uint64(seed) * np.uint64(0x9E3779B1)
+            + np.uint64(tile) * np.uint64(0x85EBCA77)) & np.uint64(0xFFFFFFFF)
+    ctr = (base + rows * np.uint64(2 * b) + cols * np.uint64(2)) & np.uint64(0xFFFFFFFF)
+
+    def mix(x):
+        x = (x + np.uint64(0x9E3779B9)) & np.uint64(0xFFFFFFFF)
+        x = ((x ^ (x >> np.uint64(16))) * np.uint64(0x85EBCA6B)) & np.uint64(0xFFFFFFFF)
+        x = ((x ^ (x >> np.uint64(13))) * np.uint64(0xC2B2AE35)) & np.uint64(0xFFFFFFFF)
+        return x ^ (x >> np.uint64(16))
+
+    def unif(bits):
+        return ((bits >> np.uint64(8)).astype(np.float32) + 1.0) * np.float32(2.0 ** -24)
+
+    u1 = unif(mix(ctr))
+    u2 = unif(mix((ctr + np.uint64(1)) & np.uint64(0xFFFFFFFF)))
+    r = np.sqrt(-2.0 * np.log(u1.astype(np.float64)))
+    return (r * np.cos(2.0 * np.pi * u2.astype(np.float64))).astype(np.float32)
+
+
+def gaussian_sk_ref(seed: int, x: np.ndarray, b: int, tile_n: int = 512) -> np.ndarray:
+    """Oracle for gaussian_sk_pallas: explicit tile-by-tile R materialization."""
+    n = x.shape[0]
+    n_pad = ((n + tile_n - 1) // tile_n) * tile_n
+    xp = np.pad(np.asarray(x, np.float32), (0, n_pad - n))
+    acc = np.zeros((b,), np.float64)
+    for t in range(n_pad // tile_n):
+        rt = gaussian_tile_ref(seed, t, tile_n, b)
+        acc += xp[t * tile_n:(t + 1) * tile_n].astype(np.float64) @ rt
+    return (acc / np.sqrt(b)).astype(np.float32)
+
+
+def gaussian_desk_ref(seed: int, s: np.ndarray, n: int, tile_n: int = 512) -> np.ndarray:
+    b = s.shape[0]
+    n_pad = ((n + tile_n - 1) // tile_n) * tile_n
+    out = np.zeros((n_pad,), np.float64)
+    for t in range(n_pad // tile_n):
+        rt = gaussian_tile_ref(seed, t, tile_n, b)
+        out[t * tile_n:(t + 1) * tile_n] = rt @ np.asarray(s, np.float64)
+    return (out[:n] / np.sqrt(b)).astype(np.float32)

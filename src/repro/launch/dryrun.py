@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input shape x
+mesh) combination against ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis() + cost_analysis(), and emit roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k [--multi-pod] [--step safl|fedopt] [--json out.json]
+
+The two XLA_FLAGS lines above MUST stay the first statements in this module:
+jax locks the device count on first init (hence also: never set this flag
+globally -- smoke tests and benches must see 1 device)."""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ASSIGNED, INPUT_SHAPES, get_config, input_specs,
+                           shape_eligible)
+from repro.core.adaptive import AdaConfig, init_opt_state
+from repro.core.safl import SAFLConfig
+from repro.core.sketch import SketchConfig
+from repro.launch import roofline as RL
+from repro.launch.mesh import data_axis_size, make_production_mesh
+from repro.launch.train import (batch_pspecs, cache_pspecs, data_axes_of,
+                                infer_batch_pspecs, make_fedopt_train_step,
+                                make_prefill_step, make_safl_train_step,
+                                make_serve_step, num_clients_of, opt_pspecs,
+                                to_shardings)
+from repro.models.model import param_shapes
+from repro.models.sharding import param_pspecs, use_mesh
+
+MEGA_PARAMS = 60e9  # configs above this use bf16 server moments (DESIGN §2)
+
+
+def build_safl_cfg(cfg, *, sketch_kind="countsketch", ratio=1e-3,
+                   local_steps=1, server="amsgrad") -> SAFLConfig:
+    from repro.models.model import count_params_analytic
+    mega = count_params_analytic(cfg) > MEGA_PARAMS
+    return SAFLConfig(
+        sketch=SketchConfig(kind=sketch_kind, ratio=ratio, min_b=64),
+        server=AdaConfig(name=server, lr=1e-3,
+                         moment_dtype=jnp.bfloat16 if mega else jnp.float32),
+        client_lr=0.01, local_steps=local_steps)
+
+
+def abstract_params(cfg):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(tuple(s), cfg.dtype),
+                        param_shapes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def abstract_opt_state(server: AdaConfig, params_abs):
+    mom = lambda: jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, server.moment_dtype), params_abs)
+    out = {"step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if server.name in ("amsgrad", "adam", "sgdm"):
+        out["m"] = mom()
+    if server.name in ("amsgrad", "adam", "adagrad"):
+        out["v"] = mom()
+    if server.name == "amsgrad":
+        out["vhat"] = mom()
+    return out
+
+
+def topology_for(cfg) -> str:
+    from repro.models.model import count_params_analytic
+    return "cross_silo" if count_params_analytic(cfg) > MEGA_PARAMS \
+        else "cross_device"
+
+
+def lower_one(arch: str, shape: str, *, multi_pod: bool, step_kind: str,
+              local_steps: int = 1, ratio: float = 1e-3,
+              sketch_kind: str = "countsketch", topology: str = "auto",
+              serve_layout: str = "default", verbose: bool = True):
+    """Returns (RooflineReport | None, status string)."""
+    cfg = get_config(arch)
+    ok, why = shape_eligible(cfg, shape)
+    if not ok:
+        return None, why
+    sh = INPUT_SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.size
+    daxes = data_axes_of(mesh)
+    if topology == "auto":
+        topology = topology_for(cfg)
+    fsdp = topology == "cross_silo"
+    G = num_clients_of(mesh, topology)
+
+    t0 = time.time()
+    with use_mesh(mesh):
+        params_abs = abstract_params(cfg)
+        pspecs = param_pspecs(params_abs, fsdp=fsdp)
+        p_sh = to_shardings(mesh, pspecs)
+
+        if sh.kind == "train":
+            safl = build_safl_cfg(cfg, sketch_kind=sketch_kind, ratio=ratio,
+                                  local_steps=local_steps)
+            if step_kind == "fedopt":
+                step, _ = make_fedopt_train_step(cfg, safl, mesh, topology)
+            else:
+                step, _ = make_safl_train_step(cfg, safl, mesh, topology)
+            specs = input_specs(cfg, shape, num_clients=G,
+                                local_steps=local_steps)
+            batch = specs["batch"]
+            opt_abs = abstract_opt_state(safl.server, params_abs)
+            b_sh = to_shardings(mesh, batch_pspecs(batch, mesh, topology))
+            o_sh = to_shardings(mesh, opt_pspecs(safl.server, pspecs))
+            key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            k_sh = NamedSharding(mesh, P())
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, o_sh, b_sh, k_sh),
+                             out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch, key_abs)
+        elif sh.kind == "prefill":
+            step = make_prefill_step(cfg)
+            specs = input_specs(cfg, shape)
+            batch = specs["batch"]
+            b_sh = to_shardings(mesh, infer_batch_pspecs(batch, daxes, mesh))
+            out_sh = NamedSharding(mesh, P(daxes, "model"))
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params_abs, batch)
+        else:  # decode
+            step = make_serve_step(cfg)
+            specs = input_specs(cfg, shape)
+            cache, tokens, pos = specs["cache"], specs["tokens"], specs["pos"]
+            import contextlib
+            flat_ctx = contextlib.nullcontext()
+            if serve_layout == "flat":
+                from repro.launch.train import (flat_tp_cache_pspecs,
+                                                flat_tp_pspecs)
+                from repro.models.sharding import model_axis_substitution
+                p_sh = to_shardings(mesh, flat_tp_pspecs(pspecs))
+                c_sh = to_shardings(mesh, flat_tp_cache_pspecs(cache, mesh))
+                flat_ctx = model_axis_substitution(("data", "model"))
+            else:
+                c_sh = to_shardings(mesh, cache_pspecs(cache, daxes, mesh))
+            from repro.launch.train import _axes_size
+            B_dec = specs["tokens"].shape[0]
+            tok_axes = daxes if B_dec % _axes_size(mesh, daxes) == 0 else None
+            t_sh = NamedSharding(mesh, P(tok_axes, None))
+            s_sh = NamedSharding(mesh, P())
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, c_sh, t_sh, s_sh),
+                             out_shardings=(NamedSharding(mesh,
+                                                          P(tok_axes, None)),
+                                            c_sh),
+                             donate_argnums=(1,))
+            with flat_ctx:
+                lowered = jitted.lower(params_abs, cache, tokens, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    model_flops = RL.model_flops_for(cfg, sh, local_steps=local_steps)
+    mom_b = 2 if topology == "cross_silo" else 4
+    amem = RL.analytic_memory_bytes(cfg, sh, chips, moment_bytes=mom_b,
+                                    local_steps=local_steps)
+    rep = RL.analyze(compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+                     chips=chips, model_flops=model_flops,
+                     analytic_mem_bytes=amem,
+                     note=(f"step={step_kind} topo={topology} "
+                           f"serve={serve_layout} "
+                           f"lower={t_lower:.0f}s compile={t_compile:.0f}s"))
+    if verbose:
+        print(f"--- {arch} x {shape} x {mesh_name} [{step_kind}] ---")
+        print("memory_analysis:", rep.memory_report)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print("cost_analysis: flops=%.3e bytes=%.3e" %
+              (float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0))))
+        print("collectives:", {k: v for k, v in rep.coll_breakdown.items()
+                               if k != "counts"})
+        print(RL.format_row(rep))
+        sys.stdout.flush()
+    return rep, "ok"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--step", default="safl", choices=["safl", "fedopt"])
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--ratio", type=float, default=1e-3)
+    ap.add_argument("--sketch", default="countsketch")
+    ap.add_argument("--topology", default="auto",
+                    choices=["auto", "cross_device", "cross_device_dp",
+                             "cross_silo"])
+    ap.add_argument("--serve-layout", default="default",
+                    choices=["default", "flat"])
+    ap.add_argument("--json", default=None, help="append reports to this file")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    reports, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rep, status = lower_one(
+                        arch, shape, multi_pod=mp, step_kind=args.step,
+                        local_steps=args.local_steps, ratio=args.ratio,
+                        sketch_kind=args.sketch, topology=args.topology,
+                        serve_layout=args.serve_layout)
+                    if rep is None:
+                        print(f"--- {arch} x {shape} x "
+                              f"{'2x16x16' if mp else '16x16'}: {status}")
+                    else:
+                        reports.append(rep)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"!!! FAIL {arch} x {shape} mp={mp}: {e!r}")
+                finally:
+                    jax.clear_caches()
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in reports:
+                f.write(json.dumps(r.to_json()) + "\n")
+    print(f"\n{len(reports)} ok, {len(failures)} failed")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

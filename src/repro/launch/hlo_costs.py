@@ -1,0 +1,258 @@
+"""Static HLO profiler with while-loop trip-count weighting.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE, so a
+lax.scan over 64 layers under-counts FLOPs/bytes/collective-bytes by 64x.
+This module parses the compiled (post-SPMD, per-device shapes) HLO text,
+builds the computation call graph (while bodies, calls, fusions), weights
+every computation by the product of enclosing ``known_trip_count``s, and
+accumulates:
+
+* matmul FLOPs (dot ops: 2 * prod(out) * prod(contracting dims)),
+* an HBM-traffic proxy (operand + output bytes of schedulable ops at fusion
+  granularity),
+* collective bytes per kind (all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute), the §Roofline collective numerator.
+
+This is the "profile" the perf loop reads (DESIGN §6): no real TPU timing
+exists in this container, so we reason from trip-weighted static costs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{")
+_OP_LINE = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'known_trip_count[^0-9]*([0-9]+)')
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_OPND_NAME = re.compile(r"%([\w\.\-]+)")
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None, 0
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return None, 0
+    shape = [int(d) for d in dims.split(",")] if dims else []
+    return shape, _DTYPE_BYTES[dt]
+
+
+def _all_shapes_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLL_KINDS})
+    coll_count: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLL_KINDS})
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def analyze_hlo_text(text: str) -> HloCosts:
+    # ---- pass 1: split into computations, collect op lines ----
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if (line and not line.startswith(" ") and "->" in line
+                and line.rstrip().endswith("{")
+                and (line.startswith("%") or line.startswith("ENTRY"))):
+            tok = line.split()[1] if line.startswith("ENTRY") else line.split()[0]
+            cur = tok.lstrip("%")
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # name -> full type string (for operand shape lookup)
+    types: dict[str, str] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            m = _OP_LINE.match(ln)
+            if m:
+                types[m.group(1)] = m.group(2)
+        # parameters keep their type in the header; approximate via op refs
+
+    # ---- pass 2: call graph with multipliers ----
+    children: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    fusion_comps: set[str] = set()
+    for name, lines in comps.items():
+        for ln in lines:
+            m = _OP_LINE.match(ln)
+            if not m:
+                continue
+            rhs = m.group(2)
+            if " while(" in rhs or rhs.startswith("while("):
+                trips = 1.0
+                tm = _TRIP.search(rhs)
+                if tm:
+                    trips = float(tm.group(1))
+                bm = re.search(r"body=%?([\w\.\-]+)", rhs)
+                cm = _COND.search(rhs)
+                if bm:
+                    children[name].append((bm.group(1), trips))
+                if cm:
+                    children[name].append((cm.group(1), trips))
+            elif " fusion(" in rhs:
+                fm = re.search(r"calls=%?([\w\.\-]+)", rhs)
+                if fm:
+                    fusion_comps.add(fm.group(1))
+            elif " call(" in rhs or " custom-call(" in rhs:
+                fm = re.search(r"to_apply=%?([\w\.\-]+)", rhs)
+                if fm:
+                    children[name].append((fm.group(1), 1.0))
+            elif " conditional(" in rhs:
+                for fm in re.finditer(r"(?:true_computation|false_computation|"
+                                      r"branch_computations=\{)([^}]*)", rhs):
+                    for nm in _OPND_NAME.findall(fm.group(1)):
+                        children[name].append((nm, 1.0))
+
+    # entry = computation never referenced as child/fusion
+    referenced = {c for lst in children.values() for c, _ in lst} | fusion_comps
+    entries = [c for c in comps if c not in referenced]
+    mult: dict[str, float] = defaultdict(float)
+    seen: set[str] = set()
+
+    def walk(comp: str, m: float):
+        mult[comp] += m
+        key = comp
+        for child, k in children.get(key, []):
+            walk(child, m * k)
+
+    for e in entries:
+        walk(e, 1.0)
+
+    # ---- pass 3: accumulate costs ----
+    costs = HloCosts()
+    for name, lines in comps.items():
+        for ln in lines:
+            om = _OP_LINE.match(ln)
+            if not om:
+                continue
+            opname, rhs = om.group(1), om.group(2)
+            weight = mult.get(name, 0.0)
+            if weight == 0.0:
+                continue
+            in_fusion = name in fusion_comps
+            # --- dot flops (count inside fusions too: weight of the fusion's
+            # caller applies transitively via mult of that computation; fused
+            # dots live in fusion comps with mult 0 -> attribute them below)
+            if " dot(" in rhs:
+                out_shape, _ = _first_shape(rhs)
+                lhs = _OPND_NAME.findall(
+                    rhs[rhs.index("dot("):])
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                if out_shape is not None and lhs and cdims is not None:
+                    lhs_type = types.get(lhs[0], "")
+                    lhs_shape, _ = _first_shape(lhs_type)
+                    k = 1.0
+                    if lhs_shape:
+                        for d in (cdims.group(1).split(",")
+                                  if cdims.group(1) else []):
+                            di = int(d)
+                            if di < len(lhs_shape):
+                                k *= lhs_shape[di]
+                    out_n = 1
+                    for d in out_shape:
+                        out_n *= d
+                    costs.flops += weight * 2.0 * out_n * k
+            if in_fusion:
+                continue
+            # --- collectives (sync and async "-start" forms; skip "-done")
+            for kind in COLL_KINDS:
+                hit = None
+                for form in (f" {kind}(", f" {kind}-start("):
+                    if form in rhs:
+                        hit = form
+                        break
+                if hit is None:
+                    continue
+                b = _all_shapes_bytes(rhs[:rhs.index(hit)])
+                costs.coll_bytes[kind] += weight * b
+                costs.coll_count[kind] += int(weight)
+            # --- HBM proxy: output + operand bytes of schedulable ops
+            skip = ("get-tuple-element", "tuple", "parameter", "constant",
+                    "bitcast", "after-all")
+            if any(rhs.lstrip().startswith(f"{s}") or f" {s}(" in rhs
+                   for s in skip):
+                continue
+            out_b = _all_shapes_bytes(rhs[:rhs.index("(")]) if "(" in rhs \
+                else _all_shapes_bytes(rhs)
+            costs.bytes += weight * out_b
+            # operand reads
+            args = _OPERANDS.search(rhs[rhs.index("("):]) if "(" in rhs else None
+            if args:
+                for nm in _OPND_NAME.findall(args.group(1))[:8]:
+                    t = types.get(nm)
+                    if t:
+                        costs.bytes += weight * _all_shapes_bytes(
+                            t[:t.index("(")] if "(" in t else t)
+    # fused dot attribution: fusion computations have mult 0; approximate by
+    # giving each fusion comp the summed weight of its callers
+    fusion_weight: dict[str, float] = defaultdict(float)
+    for name, lines in comps.items():
+        w = mult.get(name, 0.0)
+        if w == 0.0:
+            continue
+        for ln in lines:
+            om = _OP_LINE.match(ln)
+            if om and " fusion(" in om.group(2):
+                fm = re.search(r"calls=%?([\w\.\-]+)", om.group(2))
+                if fm:
+                    fusion_weight[fm.group(1)] += w
+    for fname, w in fusion_weight.items():
+        for ln in comps.get(fname, []):
+            om = _OP_LINE.match(ln)
+            if om and " dot(" in om.group(2):
+                rhs = om.group(2)
+                out_shape, _ = _first_shape(rhs)
+                lhs = _OPND_NAME.findall(rhs[rhs.index("dot("):])
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                if out_shape is not None and lhs and cdims is not None:
+                    lhs_shape, _ = _first_shape(types.get(lhs[0], ""))
+                    k = 1.0
+                    if lhs_shape:
+                        for d in (cdims.group(1).split(",")
+                                  if cdims.group(1) else []):
+                            di = int(d)
+                            if di < len(lhs_shape):
+                                k *= lhs_shape[di]
+                    out_n = 1
+                    for d in out_shape:
+                        out_n *= d
+                    costs.flops += w * 2.0 * out_n * k
+    return costs

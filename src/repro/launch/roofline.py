@@ -1,0 +1,243 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN §6).
+
+Hardware model: TPU v5e -- 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis()`` of a GSPMD-partitioned module reports **per-device**
+FLOPs/bytes, and the partitioned HLO text carries **per-device** shapes, so:
+
+    compute_s    = flops_per_device / PEAK_FLOPS        (= global/(chips*peak))
+    memory_s     = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+
+collective bytes are parsed from the compiled HLO: the summed output sizes of
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+ops (output size ~ bytes a device must move for ring/bidirectional
+implementations; we do not model link multiplicity -- constants are recorded
+so readers can rescale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  "%all-gather.3 = bf16[8,128]{1,0} all-gather(...)"
+#       "... = (f32[4,8]{...}, f32[4,8]{...}) tuple ... all-reduce(...)"
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(" + "|".join(k.replace("-", r"\-") for k in _COLL_KINDS) + r")")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes moved by each collective kind (+ op counts)."""
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_str)
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    out["counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float            # 6*N*D (global, per optimizer step)
+    useful_flops_ratio: float     # model_flops / (flops_per_device * chips)
+    memory_report: str
+    bytes_per_device_hbm: Optional[float] = None  # from memory_analysis
+    note: str = ""
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["coll_breakdown"] = {k: v for k, v in self.coll_breakdown.items()}
+        return d
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float, note: str = "",
+            analytic_mem_bytes: float | None = None) -> RooflineReport:
+    """Roofline terms from the trip-count-weighted static HLO profile
+    (hlo_costs.py).  Raw XLA cost_analysis numbers (which count scan bodies
+    once) are preserved in the note for cross-checking."""
+    from repro.launch.hlo_costs import analyze_hlo_text
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    hc = analyze_hlo_text(hlo)
+    flops = hc.flops                      # per-device, trip-weighted
+    byts = max(hc.bytes, raw_bytes)       # HBM proxy, trip-weighted
+    coll = dict(hc.coll_bytes)
+    coll["total"] = hc.coll_total
+    coll["counts"] = hc.coll_count
+    note = (note + f" raw_cost_analysis(flops={raw_flops:.3e},"
+            f" bytes={raw_bytes:.3e})")
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    if analytic_mem_bytes is not None:
+        memory_s = analytic_mem_bytes / HBM_BW
+        note += f" hlo_bytes_proxy={byts:.3e}"
+        byts = analytic_mem_bytes
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mem_rep = ""
+    hbm_bytes = None
+    try:
+        ma = compiled.memory_analysis()
+        mem_rep = str(ma)
+        hbm_bytes = float(
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0))
+    except Exception as e:  # pragma: no cover
+        mem_rep = f"memory_analysis unavailable: {e}"
+
+    useful = model_flops / max(flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=float(coll["total"]), coll_breakdown=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_flops_ratio=useful, memory_report=mem_rep,
+        bytes_per_device_hbm=hbm_bytes, note=note)
+
+
+def model_flops_for(cfg, shape_info, *, local_steps: int = 1) -> float:
+    """6*N*D for training (N = active params, D = global tokens x K),
+    2*N*D for inference."""
+    from repro.models.model import count_params_analytic
+    n_active = count_params_analytic(cfg, active_only=True)
+    if shape_info.kind == "train":
+        tokens = shape_info.global_batch * shape_info.seq_len * local_steps
+        return 6.0 * n_active * tokens
+    if shape_info.kind == "prefill":
+        tokens = shape_info.global_batch * shape_info.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape_info.global_batch
+
+
+def format_row(r: RooflineReport) -> str:
+    return (f"{r.arch:24s} {r.shape:12s} {r.mesh:10s} "
+            f"comp={r.compute_s:9.3e}s mem={r.memory_s:9.3e}s "
+            f"coll={r.collective_s:9.3e}s dom={r.dominant:10s} "
+            f"useful={r.useful_flops_ratio:6.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM-traffic estimator (DESIGN §6).
+#
+# The HLO byte proxy counts every op's operands at HLO granularity, which on
+# the (barely-fused) CPU backend massively over-counts what a TPU keeps in
+# VMEM inside fused loops.  The roofline memory term therefore uses this
+# documented analytic estimate; the HLO proxy is retained in the report for
+# comparison.
+#
+#   train:   weights read twice (fwd+bwd) + grad write + moments r/w
+#            + activation traffic ~ c_act * tokens * d_model * layers
+#   prefill: weights read once + activation traffic
+#   decode:  active weights read once per token + KV/SSM cache read + small
+# All divided by the chip count (weights sharded; tokens sharded).
+# ---------------------------------------------------------------------------
+
+C_ACT_TRAIN = 16.0   # bytes-touch factor per token-dim-layer (remat incl.)
+C_ACT_FWD = 6.0
+
+
+def analytic_memory_bytes(cfg, shape_info, chips: int, *,
+                          moment_bytes: int = 4,
+                          local_steps: int = 1) -> float:
+    from repro.models.model import count_params_analytic
+    n_total = count_params_analytic(cfg)
+    n_active = count_params_analytic(cfg, active_only=True)
+    wbytes = jnp_dtype_bytes(cfg.dtype)
+    d, L = cfg.d_model, cfg.num_layers
+
+    if shape_info.kind == "train":
+        tokens = shape_info.global_batch * shape_info.seq_len * local_steps
+        weights = n_total * wbytes * 3.0            # fwd read + bwd read + delta write
+        moments = n_total * moment_bytes * 3.0 * 2  # m, v, vhat read+write
+        acts = C_ACT_TRAIN * tokens * d * L * wbytes
+        return (weights + moments + acts) / chips
+    if shape_info.kind == "prefill":
+        tokens = shape_info.global_batch * shape_info.seq_len
+        return (n_total * wbytes + C_ACT_FWD * tokens * d * L * wbytes) / chips
+    # decode: one step
+    cache = decode_cache_bytes(cfg, shape_info)
+    return (n_active * wbytes + cache) / chips
+
+
+def decode_cache_bytes(cfg, shape_info) -> float:
+    """Total KV/SSM cache bytes read per decode step (global)."""
+    B, S = shape_info.global_batch, shape_info.seq_len
+    wb = jnp_dtype_bytes(cfg.dtype)
+    total = 0.0
+    for mixer, _ in cfg.layer_kinds():
+        if mixer == "attn":
+            if cfg.mla:
+                total += B * S * (cfg.kv_lora_rank + cfg.qk_rope_dim) * wb
+            else:
+                s_eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+                total += B * s_eff * cfg.num_kv_heads * cfg.hd * 2 * wb
+        else:
+            total += B * cfg.d_inner * cfg.ssm_state * 4.0
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * shape_info.global_batch * \
+            cfg.encoder_seq * cfg.num_kv_heads * cfg.hd * 2 * wb
+    return total
+
+
+def jnp_dtype_bytes(dt) -> int:
+    import jax.numpy as jnp
+    return jnp.dtype(dt).itemsize

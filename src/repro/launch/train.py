@@ -1,0 +1,467 @@
+"""Distributed SAFL training / serving steps for the production mesh.
+
+The FL topology maps onto the mesh (DESIGN §3): one client group per
+(pod, data) index; the *sketched* uplink is a psum of b-dim vectors executed
+inside a shard_map (so sketching is shard-local along the model axis -- no
+all-gather of the d-dim delta ever happens).  The FedOpt baseline step
+transmits raw deltas (an O(d) all-reduce) for roofline comparison.
+
+Run as a module for a real (CPU-scale) training run:
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
+from repro.core.safl import SAFLConfig, client_delta
+from repro.core.sketch import SketchConfig, desk_leaf, sk_leaf
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, forward, loss_fn, param_shapes
+from repro.models.sharding import param_pspecs
+
+try:  # jax>=0.6 moved shard_map to the top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+Pytree = Any
+
+
+def data_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def client_axes_of(mesh, topology: str) -> tuple[str, ...]:
+    """Mesh axes that enumerate FL clients.
+
+    cross_device: every (pod, data) index is a client (weights replicated
+    over data, tensor-parallel over model).  cross_device_dp: same clients,
+    but the client's OWN batch is data-parallel over the model axis with
+    fully replicated weights (beyond-paper §Perf: trades per-layer TP
+    activation collectives for one grad all-reduce -- the right regime for
+    <=3B models).  cross_silo: each pod is one client (weights FSDP-sharded
+    within the pod) -- the mapping for 100B+ configs."""
+    if topology == "cross_silo":
+        return tuple(a for a in ("pod",) if a in mesh.axis_names)
+    return data_axes_of(mesh)
+
+
+def num_clients_of(mesh, topology: str) -> int:
+    axes = client_axes_of(mesh, topology)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# shard-local sketch -> b-dim psum -> desk  (the compressed uplink)
+# ---------------------------------------------------------------------------
+
+_SKETCH_CHUNK_NUMEL = 1 << 24   # leaves above this sketch per layer-slice
+
+
+def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key):
+    """Runs PER DEVICE inside shard_map.  deltas leaves: (G_loc, *local_shard).
+    Every cross-client collective in SAFL is the pmean below -- b floats per
+    tensor, not d.
+
+    Leaves whose local shard exceeds _SKETCH_CHUNK_NUMEL are sketched per
+    slice of their leading (layer-stack) axis via lax.map: this bounds the
+    hash/sign temporaries to one layer's worth and realizes the layer-wise
+    sketching the paper's conclusion proposes."""
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    out = []
+    for i, leaf in enumerate(leaves):
+        lk = jax.random.fold_in(key, i)
+        lshape = leaf.shape[1:]                     # drop local client dim
+        numel = 1
+        for d in lshape:
+            numel *= d
+        n0 = lshape[0] if lshape else 1
+        if numel > _SKETCH_CHUNK_NUMEL and len(lshape) >= 2 and n0 > 1:
+            vs = leaf.reshape(n0, numel // n0).astype(jnp.float32)
+
+            def sk_one(args):
+                j, v = args
+                return sk_leaf(skcfg, jax.random.fold_in(lk, j), v)
+
+            s = jax.lax.map(sk_one, (jnp.arange(n0), vs))     # (n0, b_sub)
+            if client_axes:
+                s = jax.lax.pmean(s, client_axes)  # <-- compressed uplink
+
+            def desk_one(args):
+                j, sj = args
+                return desk_leaf(skcfg, jax.random.fold_in(lk, j), sj,
+                                 numel // n0)
+
+            u = jax.lax.map(desk_one, (jnp.arange(n0), s))
+            out.append(u.reshape(leaf.shape))
+            continue
+        v = leaf.reshape(-1).astype(jnp.float32)
+        s = sk_leaf(skcfg, lk, v)
+        if client_axes:
+            s = jax.lax.pmean(s, client_axes)      # <-- compressed uplink
+        u = desk_leaf(skcfg, lk, s, v.shape[0])
+        out.append(u.reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
+                            topology: str = "cross_device"):
+    """Sketch each client delta (shard-local), pmean over client axes,
+    desketch.
+
+    deltas leaves: (G, *param_shape), G sharded over the client axes; param
+    dims sharded per ``pspecs``.  Returns the update tree with param
+    sharding."""
+    client_axes = client_axes_of(mesh, topology)
+    lead = client_axes if client_axes else None
+    in_specs = jax.tree.map(
+        lambda ps: P(*((lead,) + tuple(ps))), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    out_specs = pspecs
+    fn = functools.partial(_sketch_avg_desk_local, skcfg, client_axes)
+
+    def local(d, k):
+        upd = fn(d, k)
+        # fold the local client axis (size 1 when G == #client groups;
+        # mean over it otherwise)
+        return jax.tree.map(lambda u: u.mean(axis=0), upd)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(in_specs, P()), out_specs=out_specs,
+                     check_vma=False)(deltas, key)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def client_deltas_sharded(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+                          topology: str, params, batch, eta):
+    """Per-client local training, manual over the client axes and AUTO/GSPMD
+    over the model (+FSDP) axes: each client group runs K local SGD steps on
+    its own replica with zero cross-client communication.  Returns
+    (deltas (G, *param), losses (G,))."""
+    from repro.models.sharding import manual_axes
+    loss = lambda p, b: loss_fn(model_cfg, p, b)
+    caxes = client_axes_of(mesh, topology)
+
+    # in dp mode all model-axis hints are disabled so GSPMD freely
+    # propagates the batch-over-model sharding
+    haxes = caxes + (("model",) if topology == "cross_device_dp" else ())
+
+    def body(p, b_local):
+        with manual_axes(haxes):
+            mb = jax.tree.map(lambda x: x[0], b_local)      # drop local G=1
+            if topology == "cross_device_dp":
+                mb = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, P(None, "model") if x.ndim >= 2 else P()), mb)
+            delta, l = client_delta(safl_cfg, loss, p, mb, eta)
+        delta = jax.tree.map(lambda d: d[None], delta)
+        return delta, l[None]
+
+    if not caxes:                                            # 1 client total
+        return body(params, batch)
+
+    if topology == "cross_silo":
+        # XLA's SPMD partitioner cannot handle partial-manual shard_map over
+        # the pod axis of a 3-axis mesh (hard CHECK failure); the vmap
+        # formulation partitions cleanly here because the client count (2
+        # pods) matches the pod axis exactly and weights carry no pod axis.
+        with manual_axes(()):
+            def one(mb):
+                return client_delta(safl_cfg, loss, params, mb, eta)
+            deltas, losses = jax.vmap(one)(batch)
+        return deltas, losses
+
+    lead = P(caxes)
+    b_specs = jax.tree.map(lambda x: lead, batch)
+    d_specs = jax.tree.map(lambda x: lead, params)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(), b_specs),
+                     out_specs=(d_specs, lead),
+                     axis_names=set(caxes), check_vma=False)(params, batch)
+
+
+def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+                         topology: str = "cross_device"):
+    """SAFL round on the mesh.  batch leaves: (G, K, mb, ...) with G = number
+    of FL clients (data-parallel groups or pods, per ``topology``)."""
+    abstract = jax.eval_shape(
+        lambda: jax.tree.map(lambda s: jnp.zeros(s, model_cfg.dtype),
+                             param_shapes(model_cfg),
+                             is_leaf=lambda x: isinstance(x, tuple)))
+    if topology == "cross_device_dp":
+        pspecs = jax.tree.map(lambda p: P(*((None,) * len(p))),
+                              param_pspecs(abstract),
+                              is_leaf=lambda x: isinstance(x, P))
+    else:
+        pspecs = param_pspecs(abstract, fsdp=(topology == "cross_silo"))
+
+    def step(params, opt_state, batch, key_data):
+        key = jax.random.wrap_key_data(key_data)
+        eta = jnp.asarray(safl_cfg.client_lr, jnp.float32)
+        deltas, losses = client_deltas_sharded(
+            model_cfg, safl_cfg, mesh, topology, params, batch, eta)
+        if safl_cfg.sketch.kind == "none":
+            # FedOpt baseline: raw-delta mean = O(d) all-reduce over clients
+            update = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        else:
+            update = sharded_sketch_avg_desk(
+                mesh, safl_cfg.sketch, pspecs, deltas, key, topology)
+        params, opt_state = apply_update(
+            safl_cfg.server, opt_state, params, update)
+        return params, opt_state, jnp.mean(losses)
+
+    return step, pspecs
+
+
+def make_fedopt_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+                           topology: str = "cross_device"):
+    """Uncompressed FedOPT baseline: raw-delta mean = O(d) all-reduce."""
+    cfg2 = SAFLConfig(sketch=SketchConfig(kind="none"),
+                      server=safl_cfg.server,
+                      client_lr=safl_cfg.client_lr,
+                      local_steps=safl_cfg.local_steps,
+                      remat_local=safl_cfg.remat_local)
+    return make_safl_train_step(model_cfg, cfg2, mesh, topology)
+
+
+def make_prefill_step(model_cfg: ModelConfig):
+    def step(params, batch):
+        h, _ = forward(model_cfg, params, batch, remat=False)
+        head = (params["embed"].T if model_cfg.tie_embeddings
+                else params["lm_head"])
+        return h[:, -1] @ head                      # (B, V) last-token logits
+    return step
+
+
+def make_serve_step(model_cfg: ModelConfig):
+    def step(params, cache, tokens, pos):
+        return decode_step(model_cfg, params, cache, tokens, pos)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# sharding spec helpers for jit in_shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch_tree, mesh, topology: str = "cross_device") -> Pytree:
+    """Train-batch specs: (G, K, mb, ...).  cross_device shards G over
+    (pod, data); cross_silo shards G over pod and mb over data."""
+    caxes = client_axes_of(mesh, topology)
+    lead = caxes if caxes else None
+    if topology == "cross_silo":
+        inner = "data" if "data" in mesh.axis_names else None
+        return jax.tree.map(
+            lambda x: P(*((lead, None, inner) + (None,) * (x.ndim - 3))),
+            batch_tree)
+    if topology == "cross_device_dp":
+        return jax.tree.map(
+            lambda x: P(*((lead, None, "model") + (None,) * (x.ndim - 3))),
+            batch_tree)
+    return jax.tree.map(
+        lambda x: P(*((lead,) + (None,) * (x.ndim - 1))), batch_tree)
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def infer_batch_pspecs(batch_tree, data_axes, mesh=None) -> Pytree:
+    """Inference batch: leading batch dim over (pod, data); left replicated
+    when the batch does not divide the axes (e.g. long_500k with B=1)."""
+    def spec(x):
+        axes = data_axes
+        if mesh is not None and x.shape[0] % _axes_size(mesh, data_axes):
+            axes = None
+        return P(*((axes,) + (None,) * (x.ndim - 1)))
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, data_axes, mesh=None) -> Pytree:
+    """KV caches are sequence-sharded over the model axis (flash-decoding
+    style partial softmax via GSPMD); SSM state shards d_inner.  The batch
+    dim falls back to replicated when it does not divide the data axes."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = []
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = leaf.ndim
+        baxes = data_axes
+        if mesh is not None and leaf.shape[1] % _axes_size(mesh, data_axes):
+            baxes = None
+        if name in ("k", "v", "xk", "xv"):       # (nb, B, S, Hk, hd)
+            sp = (None, baxes, "model", None, None)
+        elif name in ("ckv", "kpe"):             # (nb, B, S, r)
+            sp = (None, baxes, "model", None)
+        elif name == "h":                        # (nb, B, di, ds)
+            sp = (None, baxes, "model", None)
+        elif name == "conv":                     # (nb, B, kw-1, di)
+            sp = (None, baxes, None, "model")
+        else:
+            sp = (None,) * nd
+        if mesh is not None:
+            # drop any axis a dim cannot divide (e.g. whisper's 1500-frame
+            # cross cache on a 16-way model axis)
+            fixed = []
+            for dim, e in zip(leaf.shape, sp[:nd]):
+                if e is None:
+                    fixed.append(None)
+                    continue
+                axes = e if isinstance(e, tuple) else (e,)
+                fixed.append(e if dim % _axes_size(mesh, axes) == 0 else None)
+            sp = tuple(fixed)
+        specs.append(P(*sp[:nd]))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_pspecs(server: AdaConfig, pspecs) -> dict:
+    out = {"step": P()}
+    for k in ("m", "v", "vhat"):
+        if (server.name in ("amsgrad", "adam", "sgdm") and k == "m") or \
+           (server.name in ("amsgrad", "adam", "adagrad") and k == "v") or \
+           (server.name == "amsgrad" and k == "vhat"):
+            out[k] = pspecs
+    return out
+
+
+def to_shardings(mesh, pspec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# runnable single-host trainer (examples / integration tests use this)
+# ---------------------------------------------------------------------------
+
+def train_loop(model_cfg: ModelConfig, safl_cfg: SAFLConfig, data,
+               rounds: int, *, batch_per_client: int = 8, log_every: int = 10,
+               seed: int = 0):
+    """CPU-scale SAFL training on real (synthetic-dataset) batches."""
+    from repro.core.safl import init_safl, safl_round
+    key = jax.random.key(seed)
+    from repro.models.model import init_params
+    params = init_params(model_cfg, key)
+    opt = init_safl(safl_cfg, params)
+    loss = lambda p, b: loss_fn(model_cfg, p, b)
+    round_jit = jax.jit(functools.partial(safl_round, safl_cfg, loss))
+    history = []
+    for t in range(rounds):
+        batch = data.round_batch(batch_per_client, safl_cfg.local_steps, t)
+        params, opt, m = round_jit(params, opt, batch, jax.random.fold_in(key, t))
+        history.append(float(m["loss"]))
+        if log_every and (t % log_every == 0 or t == rounds - 1):
+            print(f"round {t:4d}  loss {history[-1]:.4f}")
+    return params, opt, history
+
+
+def _main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--sketch", default="countsketch")
+    ap.add_argument("--ratio", type=float, default=0.1)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=2)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import BigramLMData, LMDataConfig
+    cfg = get_config(args.arch, smoke=args.smoke)
+    safl = SAFLConfig(
+        sketch=SketchConfig(kind=args.sketch, ratio=args.ratio),
+        server=AdaConfig(name="amsgrad", lr=0.003),
+        client_lr=0.05, local_steps=args.local_steps)
+    data = BigramLMData(LMDataConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, num_clients=args.clients))
+    train_loop(cfg, safl, data, args.rounds)
+
+
+if __name__ == "__main__":
+    _main()
+
+
+def flat_tp_pspecs(pspecs, params_abs=None) -> Pytree:
+    """Beyond-paper serving layout: fold the data axis into the model axis
+    (256-way pure TP), sharding every weight's CONTRACTING (input) dim.
+
+    v2 after a refuted iteration (EXPERIMENTS §Perf H3): sharding output/head
+    dims conflicts with the sequence-sharded KV cache and makes GSPMD
+    all-gather the cache (1.8 TB/step observed).  Contracting-dim sharding
+    keeps weights fully resident AND the cache sequence-sharded; every
+    matmul just all-reduces its (tiny, batch x features) decode activation.
+    MoE experts stay expert-sharded (resident) with token all-to-all."""
+    _W = {"wq", "wk", "wv", "wo", "wi", "wg", "w_dq", "w_uq", "w_dkv",
+          "w_kr", "w_uk", "w_uv", "lm_head", "mtp_head", "router",
+          "x_proj", "dt_proj", "out_proj", "wx", "wz"}
+
+    def conv(path, p):
+        name = str(getattr(path[-1], "key", path[-1]))
+        parent = str(getattr(path[-2], "key", path[-2])) if len(path) > 1 \
+            else ""
+        nd = len(p)
+        tp = ("data", "model")
+        if name in ("wi", "wg", "wo") and parent in ("moe",) and nd >= 3:
+            # stacked experts (nb, E, in, out): shard E (resident experts)
+            lead = nd - 3
+            return P(*((None,) * lead + (tp, None, None)))
+        if name == "embed":
+            return P(tp, None)
+        if name in _W and nd >= 2:
+            # shard the contracting dim (second-to-last) -> output psum
+            return P(*((None,) * (nd - 2) + (tp, None)))
+        return P(*((None,) * nd))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_unflatten(
+        treedef, [conv(path, p) for path, p in flat])
+
+
+def flat_tp_cache_pspecs(cache_tree, mesh=None) -> Pytree:
+    """Cache layout for flat-TP serving: sequence dim over (data, model),
+    batch replicated."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = []
+    tp = ("data", "model")
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = leaf.ndim
+        if name in ("k", "v", "xk", "xv"):
+            sp = (None, None, tp, None, None)
+        elif name in ("ckv", "kpe"):
+            sp = (None, None, tp, None)
+        elif name == "h":
+            sp = (None, None, tp, None)
+        elif name == "conv":
+            sp = (None, None, None, tp)
+        else:
+            sp = (None,) * nd
+        if mesh is not None:
+            fixed = []
+            for dim, e in zip(leaf.shape, sp[:nd]):
+                if e is None:
+                    fixed.append(None)
+                    continue
+                axes = e if isinstance(e, tuple) else (e,)
+                fixed.append(e if dim % _axes_size(mesh, axes) == 0 else None)
+            sp = tuple(fixed)
+        specs.append(P(*sp[:nd]))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,9 @@
+from repro.models.config import ModelConfig
+from repro.models.model import (cache_shapes, count_params_analytic,
+                                decode_step, forward, init_cache, init_params,
+                                loss_fn, param_shapes)
+from repro.models.sharding import param_pspecs, use_mesh
+
+__all__ = ["ModelConfig", "forward", "loss_fn", "init_params", "param_shapes",
+           "decode_step", "init_cache", "cache_shapes", "param_pspecs",
+           "use_mesh", "count_params_analytic"]

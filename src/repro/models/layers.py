@@ -1,0 +1,525 @@
+"""Model layers for all assigned architecture families.
+
+Every layer has a full-sequence path (train / prefill) and a cached decode
+path (one new token).  Memory discipline for the production mesh:
+
+* attention is computed in query chunks (exact, softmax is over keys) so the
+  (S x S) score matrix never materializes; sliding-window attention slices
+  keys to the window => sub-quadratic compute;
+* the Mamba selective scan runs chunk-sequentially (associative scan within
+  a chunk) so the (S, d_inner, d_state) state tensor never materializes;
+* MoE uses scatter-based capacity dispatch (no (T, E, C) one-hot einsum).
+
+Sharding hints (no-ops off-mesh) implement sequence-parallel residual
+streams + head/expert-parallel internals (DESIGN §3).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import BATCH, MODEL, hint, hint_replicated
+
+Pytree = Any
+
+Q_CHUNK = 512          # query chunk for blockwise attention
+MAMBA_CHUNK = 256      # seq chunk for the selective scan
+MOE_CHUNK = 4096       # token chunk for MoE dispatch
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_kind == "ln":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# positions: RoPE, M-RoPE, sinusoidal
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(cfg: ModelConfig, positions: jax.Array, rot_dim: int):
+    """cos/sin tables.  positions: (B, S) for rope, (3, B, S) for mrope.
+    Returns (cos, sin) of shape (B, S, rot_dim // 2)."""
+    half = rot_dim // 2
+    if cfg.pos_kind == "mrope":
+        secs = cfg.mrope_sections
+        assert sum(secs) == half, (secs, half)
+        inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+        parts, off = [], 0
+        for i, s in enumerate(secs):
+            ang = positions[i][..., None].astype(jnp.float32) * inv[off:off + s]
+            parts.append(ang)
+            off += s
+        ang = jnp.concatenate(parts, axis=-1)
+    else:
+        inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+        ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, rot) rotated pairwise (half-split convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal_embed(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + optional SWA / cross) -- full-sequence path
+# ---------------------------------------------------------------------------
+
+def _attend_chunked(q, k, v, *, causal: bool, window: int, q_offset: int,
+                    num_kv: int) -> jax.Array:
+    """Blockwise exact attention.
+
+    q: (B, S, H, hd); k, v: (B, T, Hk, hd).  Softmax is over keys, so
+    chunking queries is exact.  For SWA, keys are sliced per chunk.
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    hd_v = v.shape[-1]
+    T = k.shape[1]
+    g = H // num_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    cq = min(Q_CHUNK, S)
+    n_chunks = -(-S // cq)
+    s_pad = n_chunks * cq
+    if s_pad != S:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - S), (0, 0), (0, 0)))
+
+    use_window = causal and window > 0 and T > window
+    lk = min(T, window + cq) if use_window else T
+
+    # GQA: expand kv to H heads with repeat (head dim replicated before the
+    # repeat, sharded after) -- never reshape a sharded head axis, which the
+    # SPMD partitioner cannot regroup (DESIGN §3).
+    if g > 1:
+        k = hint(k, BATCH, None, None, None)
+        v = hint(v, BATCH, None, None, None)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = hint(k, BATCH, None, MODEL, None)
+    v = hint(v, BATCH, None, MODEL, None)
+
+    def one_chunk(c):
+        c0 = c * cq
+        qc = lax.dynamic_slice_in_dim(q, c0, cq, axis=1)      # (B,cq,H,hd)
+        if use_window:
+            start = jnp.clip(c0 + q_offset - (lk - cq), 0, T - lk)
+        else:
+            start = 0
+        kc = lax.dynamic_slice_in_dim(k, start, lk, axis=1)   # (B,lk,H,hd)
+        vc = lax.dynamic_slice_in_dim(v, start, lk, axis=1)
+        scores = jnp.einsum("bqhd,bthd->bhqt", qc, kc).astype(jnp.float32)
+        scores *= scale
+        iabs = c0 + q_offset + jnp.arange(cq)
+        jabs = start + jnp.arange(lk)
+        mask = jnp.ones((cq, lk), bool)
+        if causal:
+            mask &= jabs[None, :] <= iabs[:, None]
+            if window > 0:
+                mask &= jabs[None, :] > iabs[:, None] - window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqt,bthd->bqhd", probs, vc)
+        return out.reshape(B, cq, H, hd_v)
+
+    if n_chunks == 1:
+        out = one_chunk(0)
+    else:
+        out = lax.map(one_chunk, jnp.arange(n_chunks))        # (nc,B,cq,H,hd)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, s_pad, H, hd_v)
+    return out[:, :S]
+
+
+def attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+              *, causal: bool = True, window: int = 0,
+              enc_out: Optional[jax.Array] = None,
+              kv_override: Optional[tuple] = None) -> jax.Array:
+    """Full-sequence GQA attention (optionally cross-attention)."""
+    B, S, D = x.shape
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    if cfg.attn_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+
+    src = enc_out if enc_out is not None else x
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.attn_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    T = src.shape[1]
+    k = k.reshape(B, T, Hk, hd)
+    v = v.reshape(B, T, Hk, hd)
+
+    if cfg.pos_kind in ("rope", "mrope") and enc_out is None:
+        cos, sin = rope_cos_sin(cfg, positions, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    q = hint(q, BATCH, None, MODEL, None)
+    out = _attend_chunked(q, k, v, causal=causal and enc_out is None,
+                          window=window, q_offset=0, num_kv=Hk)
+    out = hint(out, BATCH, None, MODEL, None)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def attention_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+                     cache: dict, *, window: int = 0) -> tuple[jax.Array, dict]:
+    """One-token decode with (ring-buffered, for SWA) KV cache.
+
+    x: (B, 1, D); cache: {"k","v"}: (B, Sc, Hk, hd).  Sc = window for SWA
+    layers, max_seq otherwise.  Cached keys are stored rotated."""
+    B, _, D = x.shape
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    Sc = cache["k"].shape[1]
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, Hk, hd)
+    v = v.reshape(B, 1, Hk, hd)
+
+    if cfg.pos_kind in ("rope", "mrope"):
+        pos_b = jnp.broadcast_to(pos, (B, 1))
+        if cfg.pos_kind == "mrope":
+            pos_b = jnp.broadcast_to(pos, (3, B, 1))
+        cos, sin = rope_cos_sin(cfg, pos_b, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    slot = (pos % Sc).astype(jnp.int32)
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    # abs position held by slot j: pos - ((pos - j) mod Sc); invalid if < 0
+    j = jnp.arange(Sc)
+    pj = pos - jnp.mod(pos - j, Sc)
+    valid = pj >= 0
+    if window > 0 and Sc > window:
+        valid &= pj > pos - window
+
+    g = H // Hk
+    qg = q.reshape(B, Hk, g, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, ck.astype(q.dtype))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, cv)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def cross_attention_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                           cache: dict) -> jax.Array:
+    """Decode-time cross attention against precomputed encoder k/v."""
+    B = x.shape[0]
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    g = H // Hk
+    qg = q.reshape(B, Hk, g, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, cache["xk"].astype(q.dtype))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, cache["xv"].astype(x.dtype))
+    return out.reshape(B, 1, H * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+def mla_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """Full-sequence MLA (training/prefill, unabsorbed form)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    cq = x @ p["w_dq"]
+    q = (cq @ p["w_uq"]).reshape(B, S, H, nope + rdim)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+
+    ckv = x @ p["w_dkv"]                                     # (B,S,kvr)
+    k_pe = (x @ p["w_kr"]).reshape(B, S, 1, rdim)            # shared across H
+    k_nope = (ckv @ p["w_uk"]).reshape(B, S, H, nope)
+    v = (ckv @ p["w_uv"]).reshape(B, S, H, vdim)
+
+    cos, sin = rope_cos_sin(cfg, positions, rdim)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe, cos, sin)
+
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (B, S, H, rdim))], axis=-1)
+    q_full = hint(q_full, BATCH, None, MODEL, None)
+    k_full = hint(k_full, BATCH, None, MODEL, None)
+    v = hint(v, BATCH, None, MODEL, None)
+    out = _attend_chunked(q_full, k_full, v, causal=True, window=0,
+                          q_offset=0, num_kv=H)
+    return out.reshape(B, S, H * vdim) @ p["wo"]
+
+
+def mla_attention_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                         pos: jax.Array, cache: dict) -> tuple[jax.Array, dict]:
+    """Absorbed-form MLA decode: cache holds only (ckv, k_pe) -- the MLA
+    cache-compression trick (DeepSeek-V3 §2.1)."""
+    B = x.shape[0]
+    H = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    Sc = cache["ckv"].shape[1]
+
+    cq = x @ p["w_dq"]
+    q = (cq @ p["w_uq"]).reshape(B, H, nope + rdim)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+
+    ckv_t = x @ p["w_dkv"]                                   # (B,1,kvr)
+    kpe_t = (x @ p["w_kr"]).reshape(B, 1, 1, rdim)
+
+    pos_b = jnp.broadcast_to(pos, (B, 1))
+    cos, sin = rope_cos_sin(cfg, pos_b, rdim)
+    q_pe = apply_rope(q_pe.reshape(B, 1, H, rdim), cos, sin).reshape(B, H, rdim)
+    kpe_t = apply_rope(kpe_t, cos, sin).reshape(B, 1, rdim)
+
+    slot = (pos % Sc).astype(jnp.int32)
+    ckv = lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), slot, axis=1)
+    kpe = lax.dynamic_update_slice_in_dim(
+        cache["kpe"], kpe_t.astype(cache["kpe"].dtype), slot, axis=1)
+
+    # absorb W_uk into q: q_tilde (B,H,kvr)
+    w_uk = p["w_uk"].reshape(kvr, H, nope)
+    q_tilde = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    scores = (jnp.einsum("bhr,btr->bht", q_tilde, ckv.astype(q_tilde.dtype))
+              + jnp.einsum("bhr,btr->bht", q_pe, kpe.astype(q_pe.dtype)))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(
+        jnp.asarray(nope + rdim, jnp.float32))
+    j = jnp.arange(Sc)
+    pj = pos - jnp.mod(pos - j, Sc)
+    scores = jnp.where((pj >= 0)[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    attn_c = jnp.einsum("bht,btr->bhr", probs, ckv.astype(x.dtype))  # (B,H,kvr)
+    w_uv = p["w_uv"].reshape(kvr, H, vdim)
+    out = jnp.einsum("bhr,rhv->bhv", attn_c, w_uv)
+    out = out.reshape(B, 1, H * vdim) @ p["wo"]
+    return out, {"ckv": ckv, "kpe": kpe}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_kind == "gelu":
+        h = jax.nn.gelu(x @ p["wi"] + p.get("bi", 0))
+        h = hint(h, BATCH, None, MODEL)
+        return h @ p["wo"]
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = hint(h, BATCH, None, MODEL)
+    return h @ p["wo"]
+
+
+def _expert_ffn(cfg: ModelConfig, p: dict, xe: jax.Array) -> jax.Array:
+    """xe: (E, C, D) -> (E, C, D) through per-expert SwiGLU."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def moe(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE with capacity + scatter dispatch.
+
+    Returns (out, aux_loss).  x: (B, S, D)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    xf = x.reshape(B * S, D)
+    T = B * S
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = lax.top_k(probs, k)                          # (T, k)
+    topw = topw / (jnp.sum(topw, axis=-1, keepdims=True) + 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    tc = min(MOE_CHUNK, T)
+    n_chunks = -(-T // tc)
+    cap = max(8, int(tc * k / E * cfg.capacity_factor))
+
+    def chunk_fn(args):
+        xc, wc, ic = args                                    # (tc,D),(tc,k),(tc,k)
+        fi = ic.reshape(-1)                                  # (tc*k,)
+        fw = wc.reshape(-1)
+        # position of each (token, choice) within its expert, via one-hot cumsum
+        oh = jax.nn.one_hot(fi, E, dtype=jnp.int32)          # (tc*k, E)
+        pos_mat = jnp.cumsum(oh, axis=0) - 1
+        posn = jnp.take_along_axis(pos_mat, fi[:, None], axis=1)[:, 0]
+        keep = posn < cap
+        slot = jnp.where(keep, fi * cap + posn, E * cap)     # overflow -> dump row
+        xrep = jnp.repeat(xc, k, axis=0)                     # (tc*k, D)
+        # NOTE (§Perf H2): GSPMD lowers the scatter/gather over the
+        # expert-sharded buffer as mask+all-reduce (~14 TB/step at deepseek
+        # scale).  Two attempted reformulations (replicated buffer + single
+        # all-gather of the expert outputs) measured WORSE under GSPMD's
+        # cost model (EXPERIMENTS.md §Perf H2, iters 1-2); the real fix is a
+        # shard_map all-to-all token exchange (documented future work).
+        buf = jnp.zeros((E * cap + 1, D), xc.dtype).at[slot].add(xrep)
+        buf = hint(buf[: E * cap].reshape(E, cap, D), MODEL, None, None)
+        ye = _expert_ffn(cfg, p, buf)                        # (E, cap, D)
+        ye = hint(ye, MODEL, None, None)
+        yrep = ye.reshape(E * cap, D)[jnp.clip(slot, 0, E * cap - 1)]
+        yrep = jnp.where(keep[:, None], yrep, 0.0) * fw[:, None].astype(xc.dtype)
+        return yrep.reshape(tc, k, D).sum(axis=1)
+
+    if n_chunks == 1:
+        out = chunk_fn((xf, topw, topi))
+    else:
+        t_pad = n_chunks * tc
+        xp = jnp.pad(xf, ((0, t_pad - T), (0, 0)))
+        wp = jnp.pad(topw, ((0, t_pad - T), (0, 0)))
+        ip = jnp.pad(topi, ((0, t_pad - T), (0, 0)))
+        out = lax.map(chunk_fn, (xp.reshape(n_chunks, tc, D),
+                                 wp.reshape(n_chunks, tc, k),
+                                 ip.reshape(n_chunks, tc, k)))
+        out = out.reshape(t_pad, D)[:T]
+
+    if cfg.num_shared_experts:
+        sh = jax.nn.silu(xf @ p["shared"]["wg"]) * (xf @ p["shared"]["wi"])
+        out = out + sh @ p["shared"]["wo"]
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective SSM
+# ---------------------------------------------------------------------------
+
+def _ssm_scan_chunk(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """Associative scan of h_t = a_t * h_{t-1} + b_t within a chunk.
+
+    a, b: (B, L, di, ds); h0: (B, di, ds).  Returns (h_all (B,L,di,ds),
+    h_last)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    A, Bc = lax.associative_scan(combine, (a, b), axis=1)
+    h_all = A * h0[:, None] + Bc
+    return h_all, h_all[:, -1]
+
+
+def mamba(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba-1 block (chunked selective scan)."""
+    B, S, D = x.shape
+    di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    kw = cfg.ssm_conv
+
+    u = x @ p["wx"]                                          # (B,S,di)
+    z = x @ p["wz"]
+    u = hint(u, BATCH, None, MODEL)
+
+    # causal depthwise conv, width kw
+    upad = jnp.pad(u, ((0, 0), (kw - 1, 0), (0, 0)))
+    conv = sum(upad[:, i:i + S] * p["conv_w"][i] for i in range(kw))
+    u = jax.nn.silu(conv + p["conv_b"])
+
+    xdb = u @ p["x_proj"]                                    # (B,S,dtr+2ds)
+    dt = jax.nn.softplus(xdb[..., :dtr] @ p["dt_proj"] + p["dt_bias"])
+    Bs = xdb[..., dtr:dtr + ds]                              # (B,S,ds)
+    Cs = xdb[..., dtr + ds:]
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))             # (di,ds)
+    a = jnp.exp(dt[..., None].astype(jnp.float32) * A)       # (B,S,di,ds)
+    b = (dt[..., None] * Bs[:, :, None, :] * u[..., None]).astype(jnp.float32)
+
+    lc = min(MAMBA_CHUNK, S)
+    n_chunks = -(-S // lc)
+
+    def chunk_step(h0, args):
+        ac, bc, cc = args                                    # (B,lc,di,ds) x2, (B,lc,ds)
+        h_all, h_last = _ssm_scan_chunk(ac, bc, h0)
+        yc = jnp.einsum("blds,bls->bld", h_all, cc)          # (B,lc,di)
+        return h_last, yc
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    if n_chunks == 1:
+        _, y = chunk_step(h0, (a, b, Cs.astype(jnp.float32)))
+    else:
+        s_pad = n_chunks * lc
+        pad = lambda t: jnp.pad(t, ((0, 0), (0, s_pad - S)) + ((0, 0),) * (t.ndim - 2))
+        ax = pad(a).reshape(B, n_chunks, lc, di, ds).swapaxes(0, 1)
+        bx = pad(b).reshape(B, n_chunks, lc, di, ds).swapaxes(0, 1)
+        cx = pad(Cs.astype(jnp.float32)).reshape(B, n_chunks, lc, ds).swapaxes(0, 1)
+        _, y = lax.scan(chunk_step, h0, (ax, bx, cx))
+        y = y.swapaxes(0, 1).reshape(B, s_pad, di)[:, :S]
+
+    y = (y + u.astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = hint(y, BATCH, None, MODEL)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                 cache: dict) -> tuple[jax.Array, dict]:
+    """One-token Mamba step.  cache: {"h": (B,di,ds), "conv": (B,kw-1,di)}."""
+    B = x.shape[0]
+    di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    kw = cfg.ssm_conv
+
+    u = (x @ p["wx"]).reshape(B, di)
+    z = (x @ p["wz"]).reshape(B, di)
+
+    win = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # (B,kw,di)
+    conv = jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"]
+    u = jax.nn.silu(conv)
+
+    xdb = u @ p["x_proj"]
+    dt = jax.nn.softplus(xdb[..., :dtr] @ p["dt_proj"] + p["dt_bias"])
+    Bs, Cs = xdb[..., dtr:dtr + ds], xdb[..., dtr + ds:]
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None].astype(jnp.float32) * A)       # (B,di,ds)
+    hb = dt[..., None] * Bs[:, None, :] * u[..., None]
+    h = a * cache["h"] + hb.astype(jnp.float32)
+    y = jnp.einsum("bds,bs->bd", h, Cs.astype(jnp.float32))
+    y = (y + u.astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": win[:, 1:]}

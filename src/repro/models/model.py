@@ -1,0 +1,513 @@
+"""Composable model definition: init / forward / loss / decode for every
+assigned architecture family, built as a lax.scan over stacked layer blocks
+(compile time independent of depth -- DESIGN §5)."""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.sharding import BATCH, MODEL, hint
+
+Pytree = Any
+LOSS_CHUNK = 1024  # sequence chunk for the vocab-softmax loss
+
+
+# ---------------------------------------------------------------------------
+# parameter shapes / init
+# ---------------------------------------------------------------------------
+
+def _norm_shape(cfg: ModelConfig, d: int) -> dict:
+    if cfg.norm_kind == "ln":
+        return {"scale": (d,), "bias": (d,)}
+    return {"scale": (d,)}
+
+
+def _attn_shapes(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, Hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    if cfg.mla and not cross:
+        return {
+            "ln": _norm_shape(cfg, D),
+            "w_dq": (D, cfg.q_lora_rank),
+            "w_uq": (cfg.q_lora_rank, H * (cfg.qk_nope_dim + cfg.qk_rope_dim)),
+            "w_dkv": (D, cfg.kv_lora_rank),
+            "w_kr": (D, cfg.qk_rope_dim),
+            "w_uk": (cfg.kv_lora_rank, H * cfg.qk_nope_dim),
+            "w_uv": (cfg.kv_lora_rank, H * cfg.v_head_dim),
+            "wo": (H * cfg.v_head_dim, D),
+        }
+    s = {
+        "ln": _norm_shape(cfg, D),
+        "wq": (D, H * hd), "wk": (D, Hk * hd), "wv": (D, Hk * hd),
+        "wo": (H * hd, D),
+    }
+    if cfg.attn_bias and not cross:
+        s.update({"bq": (H * hd,), "bk": (Hk * hd,), "bv": (Hk * hd,)})
+    return s
+
+
+def _mlp_shapes(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "gelu":
+        return {"ln": _norm_shape(cfg, D), "wi": (D, F), "bi": (F,),
+                "wo": (F, D), "bo": (D,)}
+    return {"ln": _norm_shape(cfg, D), "wi": (D, F), "wg": (D, F), "wo": (F, D)}
+
+
+def _moe_shapes(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.moe_ff, cfg.num_experts
+    s = {"ln": _norm_shape(cfg, D), "router": (D, E),
+         "wi": (E, D, F), "wg": (E, D, F), "wo": (E, F, D)}
+    if cfg.num_shared_experts:
+        Fs = F * cfg.num_shared_experts
+        s["shared"] = {"wi": (D, Fs), "wg": (D, Fs), "wo": (Fs, D)}
+    return s
+
+
+def _mamba_shapes(cfg: ModelConfig) -> dict:
+    D, di, ds, dtr, kw = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                          cfg.dt_rank, cfg.ssm_conv)
+    return {"ln": _norm_shape(cfg, D),
+            "wx": (D, di), "wz": (D, di),
+            "conv_w": (kw, di), "conv_b": (di,),
+            "x_proj": (di, dtr + 2 * ds), "dt_proj": (dtr, di),
+            "dt_bias": (di,), "a_log": (di, ds), "d_skip": (di,),
+            "out_proj": (di, D)}
+
+
+def _block_shapes(cfg: ModelConfig, pattern, cross: bool = False) -> dict:
+    blk = {}
+    for i, (mixer, mlp_kind) in enumerate(pattern):
+        sub = {}
+        if mixer == "attn":
+            sub["attn"] = _attn_shapes(cfg)
+            if cross:
+                sub["xattn"] = _attn_shapes(cfg, cross=True)
+        else:
+            sub["mamba"] = _mamba_shapes(cfg)
+        if mlp_kind == "dense":
+            sub["mlp"] = _mlp_shapes(cfg)
+        elif mlp_kind == "moe":
+            sub["moe"] = _moe_shapes(cfg)
+        blk[f"l{i}"] = sub
+    return blk
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    n_blocks, pattern = cfg.scan_blocks()
+    shapes: dict = {"embed": (V, D),
+                    "final_norm": _norm_shape(cfg, D),
+                    "layers": _block_shapes(cfg, pattern,
+                                            cross=cfg.cross_attention)}
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (D, V)
+    if cfg.first_dense_layers:
+        shapes["dense_layers"] = _block_shapes(
+            cfg, [("attn", "dense")] * 1)  # stacked over first_dense_layers
+    if cfg.encoder_layers:
+        shapes["enc_layers"] = _block_shapes(cfg, [("attn", "dense")])
+        shapes["enc_norm"] = _norm_shape(cfg, D)
+    if cfg.mtp:
+        shapes["mtp_head"] = (D, V)
+
+    def stackify(tree, n):
+        return jax.tree.map(lambda s: (n,) + tuple(s), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    shapes["layers"] = stackify(shapes["layers"], n_blocks)
+    if cfg.first_dense_layers:
+        shapes["dense_layers"] = stackify(shapes["dense_layers"],
+                                          cfg.first_dense_layers)
+    if cfg.encoder_layers:
+        shapes["enc_layers"] = stackify(shapes["enc_layers"], cfg.encoder_layers)
+    return shapes
+
+
+def _init_leaf(key, path: str, shape, cfg: ModelConfig) -> jax.Array:
+    """Initialize a single parameter tensor (fan-in scaled normal)."""
+    dt = cfg.dtype
+    if path.endswith(("scale", "d_skip")):
+        return jnp.ones(shape, dt)
+    if path.endswith(("bias", "conv_b", "bq", "bk", "bv", "bi", "bo")):
+        return jnp.zeros(shape, dt)
+    if path.endswith("dt_bias"):
+        return jnp.full(shape, -4.6, dt)  # softplus ~= 0.01
+    if path.endswith("a_log"):
+        ds = shape[-1]
+        a = jnp.tile(jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32)),
+                     shape[:-1] + (1,))
+        return a.astype(dt)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 0.02 if path.endswith(("embed", "lm_head", "mtp_head")) else \
+        1.0 / math.sqrt(max(fan_in, 1))
+    if path.endswith(("wo", "out_proj")):
+        std /= math.sqrt(2.0 * max(cfg.num_layers, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    leaves = []
+    for i, (path, shape) in enumerate(flat):
+        spath = "/".join(str(getattr(k, "key", k)) for k in path)
+        leaves.append(_init_leaf(jax.random.fold_in(key, i), spath, shape, cfg))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = param_shapes(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    total = 0
+    for path, shape in flat:
+        spath = "/".join(str(getattr(k, "key", k)) for k in path)
+        n = int(np.prod(shape))
+        if active_only and "/moe/" in spath and spath.split("/")[-1] in \
+                ("wi", "wg", "wo"):
+            n = int(n * cfg.moe_top_k / max(cfg.num_experts, 1))
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# layer-block application (shared by train and decode paths)
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, pattern, blk: dict, x, positions, *,
+                 enc_out=None, bidirectional=False):
+    """All sub-layers of one scan block.  Returns (x, aux_sum)."""
+    aux = jnp.zeros((), jnp.float32)
+    for i, (mixer, mlp_kind) in enumerate(pattern):
+        sub = blk[f"l{i}"]
+        window = cfg.sliding_window if mixer == "attn" else 0
+        if mixer == "attn":
+            h = L.apply_norm(cfg, sub["attn"]["ln"], x)
+            if cfg.mla:
+                h = L.mla_attention(cfg, sub["attn"], h, positions)
+            else:
+                h = L.attention(cfg, sub["attn"], h, positions,
+                                causal=not bidirectional, window=window)
+            x = x + h
+            if enc_out is not None and "xattn" in sub:
+                h = L.apply_norm(cfg, sub["xattn"]["ln"], x)
+                h = L.attention(cfg, sub["xattn"], h, positions,
+                                enc_out=enc_out)
+                x = x + h
+        else:
+            h = L.apply_norm(cfg, sub["mamba"]["ln"], x)
+            x = x + L.mamba(cfg, sub["mamba"], h)
+        if mlp_kind == "dense":
+            h = L.apply_norm(cfg, sub["mlp"]["ln"], x)
+            x = x + L.mlp(cfg, sub["mlp"], h)
+        elif mlp_kind == "moe":
+            h = L.apply_norm(cfg, sub["moe"]["ln"], x)
+            h, a = L.moe(cfg, sub["moe"], h)
+            x = x + h
+            aux = aux + a
+        x = hint(x, BATCH, MODEL, None)   # sequence-parallel residual stream
+    return x, aux
+
+
+def _scan_blocks(cfg: ModelConfig, pattern, stacked: dict, x, positions, *,
+                 enc_out=None, bidirectional=False, remat=True):
+    def body(carry, blk):
+        xc, aux = carry
+        fn = partial(_apply_block, cfg, pattern, enc_out=enc_out,
+                     bidirectional=bidirectional)
+        if remat:
+            fn = jax.checkpoint(fn)
+        xc, a = fn(blk, xc, positions)
+        return (xc, aux + a), None
+
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss (train + prefill)
+# ---------------------------------------------------------------------------
+
+def _positions_for(cfg: ModelConfig, batch: dict, B: int, S: int):
+    if cfg.pos_kind == "mrope":
+        P = cfg.num_frontend_tokens
+        grid = max(1, int(math.isqrt(max(P, 1))))
+        pidx = jnp.arange(P)
+        t_pos = jnp.zeros((P,), jnp.int32)
+        h_pos = (pidx // grid).astype(jnp.int32)
+        w_pos = (pidx % grid).astype(jnp.int32)
+        text = jnp.arange(S - P, dtype=jnp.int32) + grid
+        tpos = jnp.concatenate([t_pos, text])
+        hpos = jnp.concatenate([h_pos, text])
+        wpos = jnp.concatenate([w_pos, text])
+        pos = jnp.stack([tpos, hpos, wpos])                   # (3, S)
+        return jnp.broadcast_to(pos[:, None, :], (3, B, S))
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (hidden (B,S,D), aux_loss)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    n_blocks, pattern = cfg.scan_blocks()
+
+    emb = jnp.take(params["embed"], tokens, axis=0)           # (B,St,D)
+    if cfg.frontend == "vision":
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(emb.dtype), emb], axis=1)
+    else:
+        x = emb
+    S = x.shape[1]
+    positions = _positions_for(cfg, batch, B, S)
+    if cfg.pos_kind == "sinusoidal":
+        x = x + L.sinusoidal_embed(jnp.arange(S), cfg.d_model)[None].astype(x.dtype)
+    x = hint(x, BATCH, MODEL, None)
+
+    enc_out = None
+    if cfg.encoder_layers:
+        e = batch["audio_embeds"].astype(x.dtype)
+        Te = e.shape[1]
+        e = e + L.sinusoidal_embed(jnp.arange(Te), cfg.d_model)[None].astype(e.dtype)
+        e, _ = _scan_blocks(cfg, [("attn", "dense")], params["enc_layers"], e,
+                            jnp.broadcast_to(jnp.arange(Te)[None], (B, Te)),
+                            bidirectional=True, remat=remat)
+        enc_out = L.apply_norm(cfg, params["enc_norm"], e)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.first_dense_layers:
+        x, a = _scan_blocks(cfg, [("attn", "dense")], params["dense_layers"],
+                            x, positions, remat=remat)
+        aux += a
+    x, a = _scan_blocks(cfg, pattern, params["layers"], x, positions,
+                        enc_out=enc_out, remat=remat)
+    aux += a
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, aux
+
+
+def _logits(cfg: ModelConfig, params: dict, h: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head
+
+
+def _ce_loss_chunked(cfg, params, h, labels, mask, head_name="lm_head"):
+    """Cross-entropy over the vocab, chunked along the sequence."""
+    B, S, D = h.shape
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params[head_name])
+    sc = min(LOSS_CHUNK, S)
+    n_chunks = -(-S // sc)
+    s_pad = n_chunks * sc
+    hp = jnp.pad(h, ((0, 0), (0, s_pad - S), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, s_pad - S)))
+    mp = jnp.pad(mask, ((0, 0), (0, s_pad - S)))
+
+    def chunk(args):
+        hc, lc, mc = args
+        logits = (hc @ head).astype(jnp.float32)
+        logits = hint(logits, BATCH, None, MODEL)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via masked sum over the (model-sharded) vocab axis:
+        # shard-local partial + tiny psum, instead of a cross-shard gather
+        vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                             logits.ndim - 1)
+        gold = jnp.sum(jnp.where(vocab_ids == lc[..., None], logits, 0.0),
+                       axis=-1)
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    if n_chunks == 1:
+        tot, cnt = chunk((hp, lp, mp.astype(jnp.float32)))
+    else:
+        hs = hp.reshape(B, n_chunks, sc, D).swapaxes(0, 1)
+        ls = lp.reshape(B, n_chunks, sc).swapaxes(0, 1)
+        ms = mp.astype(jnp.float32).reshape(B, n_chunks, sc).swapaxes(0, 1)
+        tots, cnts = lax.map(chunk, (hs, ls, ms))
+        tot, cnt = jnp.sum(tots), jnp.sum(cnts)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = True) -> jax.Array:
+    """Next-token LM loss (masked to text positions for VLM; decoder tokens
+    for enc-dec; +MTP auxiliary for DeepSeek)."""
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    h, aux = forward(cfg, params, batch, remat=remat)
+    P = cfg.num_frontend_tokens if cfg.frontend == "vision" else 0
+    ht = h[:, P:]                                             # text hidden
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = jnp.ones((B, St), bool).at[:, -1].set(False)
+    loss = _ce_loss_chunked(cfg, params, ht, labels, mask)
+    if cfg.mtp:
+        labels2 = jnp.pad(tokens[:, 2:], ((0, 0), (0, 2)))
+        mask2 = jnp.ones((B, St), bool).at[:, -2:].set(False)
+        loss = loss + cfg.mtp_weight * _ce_loss_chunked(
+            cfg, params, ht, labels2, mask2, head_name="mtp_head")
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _cache_shapes_block(cfg: ModelConfig, pattern, B: int, max_seq: int,
+                        cross: bool) -> dict:
+    Hk, hd = cfg.num_kv_heads, cfg.hd
+    out = {}
+    for i, (mixer, _) in enumerate(pattern):
+        sub = {}
+        if mixer == "attn":
+            if cfg.mla:
+                sub["ckv"] = (B, max_seq, cfg.kv_lora_rank)
+                sub["kpe"] = (B, max_seq, cfg.qk_rope_dim)
+            else:
+                sc = min(max_seq, cfg.sliding_window) if cfg.sliding_window \
+                    else max_seq
+                sub["k"] = (B, sc, Hk, hd)
+                sub["v"] = (B, sc, Hk, hd)
+            if cross:
+                sub["xk"] = (B, cfg.encoder_seq, Hk, hd)
+                sub["xv"] = (B, cfg.encoder_seq, Hk, hd)
+        else:
+            sub["h"] = (B, cfg.d_inner, cfg.ssm_state)
+            sub["conv"] = (B, cfg.ssm_conv - 1, cfg.d_inner)
+        out[f"l{i}"] = sub
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, B: int, max_seq: int) -> dict:
+    n_blocks, pattern = cfg.scan_blocks()
+
+    def stackify(tree, n):
+        return jax.tree.map(lambda s: (n,) + tuple(s), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    shapes = {"layers": stackify(
+        _cache_shapes_block(cfg, pattern, B, max_seq, cfg.cross_attention),
+        n_blocks)}
+    if cfg.first_dense_layers:
+        shapes["dense_layers"] = stackify(
+            _cache_shapes_block(cfg, [("attn", "dense")], B, max_seq, False),
+            cfg.first_dense_layers)
+    return shapes
+
+
+def _cache_dtype(cfg: ModelConfig, path: str):
+    return jnp.float32 if path.endswith(("h",)) else cfg.dtype
+
+
+def init_cache(cfg: ModelConfig, B: int, max_seq: int) -> dict:
+    shapes = cache_shapes(cfg, B, max_seq)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    leaves = []
+    for path, shape in flat:
+        spath = "/".join(str(getattr(k, "key", k)) for k in path)
+        leaves.append(jnp.zeros(shape, _cache_dtype(cfg, spath)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _decode_block(cfg: ModelConfig, pattern, blk, cache_blk, x, pos):
+    new_cache = {}
+    for i, (mixer, mlp_kind) in enumerate(pattern):
+        sub, csub = blk[f"l{i}"], cache_blk[f"l{i}"]
+        nsub = dict(csub)
+        if mixer == "attn":
+            h = L.apply_norm(cfg, sub["attn"]["ln"], x)
+            if cfg.mla:
+                h, upd = L.mla_attention_decode(cfg, sub["attn"], h, pos, csub)
+            else:
+                h, upd = L.attention_decode(cfg, sub["attn"], h, pos, csub,
+                                            window=cfg.sliding_window)
+            nsub.update(upd)
+            x = x + h
+            if "xk" in csub and "xattn" in sub:
+                h = L.apply_norm(cfg, sub["xattn"]["ln"], x)
+                x = x + L.cross_attention_decode(cfg, sub["xattn"], h, csub)
+        else:
+            h = L.apply_norm(cfg, sub["mamba"]["ln"], x)
+            h, upd = L.mamba_decode(cfg, sub["mamba"], h, csub)
+            nsub.update(upd)
+            x = x + h
+        if mlp_kind == "dense":
+            h = L.apply_norm(cfg, sub["mlp"]["ln"], x)
+            x = x + L.mlp(cfg, sub["mlp"], h)
+        elif mlp_kind == "moe":
+            h = L.apply_norm(cfg, sub["moe"]["ln"], x)
+            h, _ = L.moe(cfg, sub["moe"], h)
+            x = x + h
+        new_cache[f"l{i}"] = nsub
+    return x, new_cache
+
+
+def encode_for_decode(cfg: ModelConfig, params: dict, cache: dict,
+                      audio_embeds: jax.Array) -> dict:
+    """Run the encoder once and fill the decoder blocks' cross-attention
+    k/v caches (Whisper-style serving)."""
+    B, Te, _ = audio_embeds.shape
+    e = audio_embeds + L.sinusoidal_embed(
+        jnp.arange(Te), cfg.d_model)[None].astype(audio_embeds.dtype)
+    e, _ = _scan_blocks(cfg, [("attn", "dense")], params["enc_layers"], e,
+                        jnp.broadcast_to(jnp.arange(Te)[None], (B, Te)),
+                        bidirectional=True, remat=False)
+    enc_out = L.apply_norm(cfg, params["enc_norm"], e)
+    Hk, hd = cfg.num_kv_heads, cfg.hd
+
+    def fill(blk_cache, blk_params):
+        out = dict(blk_cache)
+        for name, sub in blk_params.items():
+            if "xattn" in sub:
+                xk = (enc_out @ sub["xattn"]["wk"]).reshape(B, Te, Hk, hd)
+                xv = (enc_out @ sub["xattn"]["wv"]).reshape(B, Te, Hk, hd)
+                out[name] = {**blk_cache[name],
+                             "xk": xk.astype(blk_cache[name]["xk"].dtype),
+                             "xv": xv.astype(blk_cache[name]["xv"].dtype)}
+        return out
+
+    new_layers = jax.vmap(fill)(cache["layers"], params["layers"])
+    return {**cache, "layers": new_layers}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, pos: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """One-token decode.  tokens: (B, 1) int32; pos: scalar int32 (next
+    position to fill).  Returns (logits (B, V), new_cache)."""
+    n_blocks, pattern = cfg.scan_blocks()
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)             # (B,1,D)
+    if cfg.pos_kind == "sinusoidal":
+        x = x + L.sinusoidal_embed(pos[None], cfg.d_model)[None].astype(x.dtype)
+    x = hint(x, BATCH, None, None)
+    new_cache = {}
+    if cfg.first_dense_layers:
+        def dbody(carry, xs):
+            blk, cb = xs
+            xc, nc = _decode_block(cfg, [("attn", "dense")], blk, cb, carry, pos)
+            return xc, nc
+        x, nc = lax.scan(dbody, x, (params["dense_layers"],
+                                    cache["dense_layers"]))
+        new_cache["dense_layers"] = nc
+
+    def body(carry, xs):
+        blk, cb = xs
+        xc, nc = _decode_block(cfg, pattern, blk, cb, carry, pos)
+        return xc, nc
+
+    x, nc = lax.scan(body, x, (params["layers"], cache["layers"]))
+    new_cache["layers"] = nc
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = _logits(cfg, params, x)[:, 0, :cfg.vocab_size]
+    logits = hint(logits, BATCH, MODEL)
+    return logits, new_cache

@@ -1,0 +1,210 @@
+"""Mesh context + sharding annotation helpers.
+
+The model code calls ``hint(x, ...)`` at layer boundaries and around
+attention/MoE internals.  When no production mesh is active (unit tests,
+CPU examples) every hint is a no-op, so the same model code runs everywhere.
+
+Axis convention (DESIGN §3):
+  * ``pod`` , ``data`` -- batch / client-group axes (FSDP weight sharding
+    also uses ``data``)
+  * ``model``          -- tensor/expert parallel axis
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+_MANUAL_AXES: frozenset = frozenset()   # axes currently manual (shard_map)
+_MODEL_SUBST = None                      # flat-TP: what "model" expands to
+
+BATCH = ("pod", "data")   # canonical batch axes (pod may be absent)
+MODEL = "model"
+FSDP = "data"             # weights' secondary shard axis
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Activate a mesh for both GSPMD resolution and our hint() helper."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        if mesh is None:
+            yield
+        else:
+            with mesh:
+                yield
+    finally:
+        _ACTIVE_MESH = prev
+
+
+@contextlib.contextmanager
+def model_axis_substitution(axes):
+    """Flat-TP serving (DESIGN §7 / EXPERIMENTS H3): every 'model' hint in
+    the layer code expands to the given axis tuple, e.g. ("data","model")."""
+    global _MODEL_SUBST
+    prev = _MODEL_SUBST
+    _MODEL_SUBST = tuple(axes)
+    try:
+        yield
+    finally:
+        _MODEL_SUBST = prev
+
+
+@contextlib.contextmanager
+def manual_axes(axes):
+    """Mark mesh axes as manual while tracing a shard_map body: hint() must
+    not emit sharding constraints over manual axes."""
+    global _MANUAL_AXES
+    prev = _MANUAL_AXES
+    _MANUAL_AXES = frozenset(axes)
+    try:
+        yield
+    finally:
+        _MANUAL_AXES = prev
+
+
+def _clean_spec(spec) -> Optional[P]:
+    """Drop axis names not present in the active mesh; None if no mesh."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return None
+    names = set(mesh.axis_names) - _MANUAL_AXES
+    out = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+            continue
+        t = e if isinstance(e, tuple) else (e,)
+        if _MODEL_SUBST is not None:
+            if MODEL in t:
+                t2 = []
+                for a in t:
+                    if a == MODEL:
+                        t2.extend(_MODEL_SUBST)
+                    else:
+                        t2.append(a)
+                t = tuple(dict.fromkeys(t2))
+            else:
+                # batch-axis entries: axes consumed by the flat TP product
+                # cannot also shard the batch -> drop them (replicated)
+                t = tuple(a for a in t if a not in _MODEL_SUBST)
+        t = tuple(a for a in t if a in names)
+        out.append(t if len(t) > 1 else (t[0] if t else None))
+    return P(*out)
+
+
+def hint_replicated(x: jax.Array):
+    """Explicitly replicate (hint() treats all-None specs as no-ops)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*((None,) * x.ndim)))
+
+
+def hint(x: jax.Array, *spec):
+    """with_sharding_constraint that degrades to a no-op off-mesh, or when
+    every referenced axis is manual/absent (never force replication)."""
+    p = _clean_spec(spec)
+    if p is None or all(e is None for e in p):
+        return x
+    return jax.lax.with_sharding_constraint(x, p)
+
+
+def batch_spec(*rest) -> tuple:
+    """P((pod, data), *rest) -- batch-sharded leading dim."""
+    return (BATCH,) + rest
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules (name-based; see DESIGN §3).
+# Keys are regexes over the flattened path; first match wins.  Every weight
+# is 2-D sharded: one dim on "model" (TP/EP) and one on "data" (FSDP/ZeRO),
+# so even 671B-scale configs shard across the full chip count.
+# ---------------------------------------------------------------------------
+
+_RULES: list[tuple[str, tuple]] = [
+    # embeddings / heads
+    (r"embed$",            (MODEL, FSDP)),           # (V, D)
+    (r"lm_head$",          (FSDP, MODEL)),           # (D, V)
+    (r"mtp_head$",         (FSDP, MODEL)),
+    (r"pos_embed$",        (None, MODEL)),
+    # MoE experts: (E, in, out) -- experts over model (EP), in-dim over data
+    (r"moe/w[ig]$",        (MODEL, FSDP, None)),
+    (r"moe/wo$",           (MODEL, None, FSDP)),
+    (r"moe/router$",       (FSDP, None)),
+    (r"shared/w[ig]$",     (FSDP, MODEL)),
+    (r"shared/wo$",        (MODEL, FSDP)),
+    # attention (col-parallel in, row-parallel out)
+    (r"attn/w[qkv]$",      (FSDP, MODEL)),
+    (r"attn/wo$",          (MODEL, FSDP)),
+    (r"attn/w_dq$",        (FSDP, None)),            # MLA down-projections
+    (r"attn/w_uq$",        (None, MODEL)),
+    (r"attn/w_dkv$",       (FSDP, None)),
+    (r"attn/w_kr$",        (FSDP, None)),
+    (r"attn/w_uk$",        (None, MODEL)),
+    (r"attn/w_uv$",        (None, MODEL)),
+    # dense MLP
+    (r"mlp/w[ig]$",        (FSDP, MODEL)),
+    (r"mlp/wo$",           (MODEL, FSDP)),
+    # mamba
+    (r"mamba/w[xz]$",      (FSDP, MODEL)),           # (D, d_inner)
+    (r"mamba/out_proj$",   (MODEL, FSDP)),           # (d_inner, D)
+    (r"mamba/x_proj$",     (MODEL, None)),           # (d_inner, dtr+2ds)
+    (r"mamba/dt_proj$",    (None, MODEL)),           # (dtr, d_inner)
+    (r"mamba/conv_w$",     (None, MODEL)),           # (k, d_inner)
+    (r"mamba/(conv_b|dt_bias|d_skip)$", (MODEL,)),
+    (r"mamba/a_log$",      (MODEL, None)),           # (d_inner, d_state)
+    # biases on col-parallel projections
+    (r"attn/b[qkv]$",      (MODEL,)),
+    # everything else (norms, small biases): replicated
+]
+
+
+def _pspec_for(path: str, ndim: int, stacked: bool) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            spec = tuple(spec)
+            if stacked:
+                spec = (None,) + spec  # leading layer-stack dim
+            spec = spec + (None,) * (ndim - len(spec))
+            return P(*spec[:ndim])
+    return P(*((None,) * ndim))
+
+
+def param_pspecs(params, fsdp: bool = False) -> "jax.tree_util.PyTreeDef":
+    """PartitionSpec pytree for a model param tree (launch/dryrun input).
+
+    fsdp=False: weights sharded over ``model`` only, replicated over
+    data -- the cross-device FL mapping (every data group = one client owns
+    a full replica).  fsdp=True: weights additionally ZeRO-sharded over
+    ``data`` -- the cross-silo mapping (client = pod; mandatory for the
+    132B-672B configs).  See DESIGN §3."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        spath = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        parts = spath.split("/")
+        stacked = bool({"layers", "dense_layers", "enc_layers"} & set(parts))
+        spec = _pspec_for(spath, leaf.ndim, stacked)
+        if not fsdp:
+            spec = P(*[None if e == FSDP else e for e in spec])
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(mesh: Mesh, pspecs) -> "jax.tree_util.PyTreeDef":
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

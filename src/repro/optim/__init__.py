@@ -1,0 +1,1 @@
+from repro.optim.schedules import constant, cosine, inv_sqrt, sketch_size_schedule

@@ -1,0 +1,43 @@
+"""Learning-rate schedules (paper Appendix D uses cosine on the server;
+Theorem 3.2/B.3 analyze constant and 1/sqrt(t) decays)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> multiplier
+
+
+def constant() -> Schedule:
+    return lambda t: jnp.ones_like(t, jnp.float32)
+
+
+def inv_sqrt(t0: float = 1.0) -> Schedule:
+    """eta_t = 1 / sqrt(t + t0): the decay analyzed in Theorem B.3."""
+    return lambda t: 1.0 / jnp.sqrt(t.astype(jnp.float32) + t0)
+
+
+def cosine(total_steps: int, min_frac: float = 1e-3,
+           warmup: int = 0) -> Schedule:
+    """Cosine decay to min_frac with optional linear warmup (paper App. D)."""
+    def fn(t):
+        t = t.astype(jnp.float32)
+        warm = jnp.minimum(t / max(warmup, 1), 1.0) if warmup else 1.0
+        frac = jnp.clip((t - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return warm * cos
+    return fn
+
+
+def sketch_size_schedule(base_ratio: float, total_steps: int,
+                         final_frac: float = 1.0) -> Callable[[int], float]:
+    """Beyond-paper: anneal the sketch ratio over rounds (DESIGN §7.2).
+    Returns a python-level schedule (sketch size is a static shape, so it can
+    only change at jit boundaries -- the trainer re-jits per phase)."""
+    def fn(step: int) -> float:
+        frac = min(max(step / max(total_steps, 1), 0.0), 1.0)
+        return base_ratio * (1.0 + (final_frac - 1.0) * frac)
+    return fn

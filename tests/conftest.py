@@ -1,0 +1,28 @@
+import gc
+
+import jax
+import pytest
+
+# Tests run on the single CPU device.  The 512-device flag is set ONLY by
+# launch/dryrun.py (see DESIGN §5) -- never here.
+jax.config.update("jax_enable_x64", False)
+
+_last_module = [None]
+
+
+@pytest.fixture(autouse=True)
+def _clear_jax_caches_between_modules(request):
+    """The full suite jit-compiles ~10 architectures x several step kinds;
+    without clearing, the accumulated executables exhaust host memory
+    (observed: LLVM 'Cannot allocate memory' after ~120 tests)."""
+    mod = request.module.__name__
+    if _last_module[0] is not None and _last_module[0] != mod:
+        jax.clear_caches()
+        gc.collect()
+    _last_module[0] = mod
+    yield
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

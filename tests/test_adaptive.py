@@ -1,0 +1,107 @@
+"""Unit tests for ADA_OPT (Algorithm 2) semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaConfig, apply_update, init_opt_state, \
+    opt_state_bytes
+
+
+def _params():
+    return {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([0.5])}
+
+
+def _update():
+    return {"w": jnp.array([0.1, -0.2, 0.3]), "b": jnp.array([-0.4])}
+
+
+def test_sgd_step():
+    cfg = AdaConfig(name="sgd", lr=0.5)
+    p, s = apply_update(cfg, init_opt_state(cfg, _params()), _params(), _update())
+    np.testing.assert_allclose(np.array(p["w"]),
+                               np.array([1.0, -2.0, 3.0]) - 0.5 * np.array([0.1, -0.2, 0.3]),
+                               rtol=1e-6)
+    assert int(s["step"]) == 1
+
+
+def test_amsgrad_matches_algorithm2():
+    """First step of Alg. 2 closed form: m=(1-b1)u, v=(1-b2)u^2,
+    vhat=max(0,v)=v, x -= k * m/(sqrt(vhat)+eps)."""
+    cfg = AdaConfig(name="amsgrad", lr=0.1, beta1=0.9, beta2=0.99, eps=1e-8)
+    u = _update()
+    p, s = apply_update(cfg, init_opt_state(cfg, _params()), _params(), u)
+    m = 0.1 * np.array([0.1, -0.2, 0.3])
+    v = 0.01 * np.array([0.1, -0.2, 0.3]) ** 2
+    want = np.array([1.0, -2.0, 3.0]) - 0.1 * m / (np.sqrt(v) + 1e-8)
+    np.testing.assert_allclose(np.array(p["w"]), want, rtol=1e-5)
+    np.testing.assert_allclose(np.array(s["vhat"]["w"]), v, rtol=1e-6)
+
+
+def test_amsgrad_vhat_monotone():
+    cfg = AdaConfig(name="amsgrad", lr=0.01)
+    params = _params()
+    state = init_opt_state(cfg, params)
+    prev = None
+    for t in range(5):
+        u = jax.tree.map(lambda x: x * (0.5 ** t), _update())
+        params, state = apply_update(cfg, state, params, u)
+        vh = np.array(state["vhat"]["w"])
+        if prev is not None:
+            assert (vh >= prev - 1e-9).all()
+        prev = vh
+
+
+def test_adam_vs_amsgrad_divergence():
+    """With shrinking updates, Adam's v decays but AMSGrad's vhat does not."""
+    ca = AdaConfig(name="adam", lr=0.01)
+    cm = AdaConfig(name="amsgrad", lr=0.01)
+    pa, sa = _params(), init_opt_state(ca, _params())
+    pm, sm = _params(), init_opt_state(cm, _params())
+    for t in range(20):
+        u = jax.tree.map(lambda x: x * (0.5 ** t), _update())
+        pa, sa = apply_update(ca, sa, pa, u)
+        pm, sm = apply_update(cm, sm, pm, u)
+    assert float(sm["vhat"]["w"].max()) > float(sa["v"]["w"].max())
+
+
+def test_adagrad_accumulates():
+    cfg = AdaConfig(name="adagrad", lr=0.1)
+    params, state = _params(), init_opt_state(AdaConfig(name="adagrad"), _params())
+    for _ in range(3):
+        params, state = apply_update(cfg, state, params, _update())
+    np.testing.assert_allclose(np.array(state["v"]["w"]),
+                               3 * np.array([0.1, -0.2, 0.3]) ** 2, rtol=1e-5)
+
+
+def test_weight_decay():
+    cfg = AdaConfig(name="sgd", lr=1.0, weight_decay=0.1)
+    zero_u = jax.tree.map(jnp.zeros_like, _update())
+    p, _ = apply_update(cfg, init_opt_state(cfg, _params()), _params(), zero_u)
+    np.testing.assert_allclose(np.array(p["w"]),
+                               0.9 * np.array([1.0, -2.0, 3.0]), rtol=1e-6)
+
+
+def test_bf16_moments():
+    cfg = AdaConfig(name="amsgrad", moment_dtype=jnp.bfloat16)
+    state = init_opt_state(cfg, _params())
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    p, s = apply_update(cfg, state, _params(), _update())
+    assert s["v"]["w"].dtype == jnp.bfloat16
+    assert p["w"].dtype == jnp.float32
+
+
+def test_opt_state_bytes():
+    params = {"w": jnp.zeros((10, 10))}
+    assert opt_state_bytes(AdaConfig(name="amsgrad"), params) == 100 * 3 * 4
+    assert opt_state_bytes(AdaConfig(name="sgd"), params) == 0
+
+
+def test_lr_scale():
+    cfg = AdaConfig(name="sgd", lr=1.0)
+    p1, _ = apply_update(cfg, init_opt_state(cfg, _params()), _params(),
+                         _update(), lr_scale=0.5)
+    p2, _ = apply_update(AdaConfig(name="sgd", lr=0.5),
+                         init_opt_state(cfg, _params()), _params(), _update())
+    np.testing.assert_allclose(np.array(p1["w"]), np.array(p2["w"]), rtol=1e-6)

@@ -1,0 +1,203 @@
+"""Model-family tests: forward/loss/decode + prefill-vs-decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (ModelConfig, decode_step, forward, init_cache,
+                          init_params, loss_fn)
+from repro.models.model import encode_for_decode
+
+
+def tiny_dense(**kw):
+    base = dict(name="t", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _greedy_forward_logits(cfg, params, tokens, extra=None):
+    batch = {"tokens": tokens}
+    if extra:
+        batch.update(extra)
+    h, _ = forward(cfg, params, batch, remat=False)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ head)[..., :cfg.vocab_size]
+
+
+@pytest.mark.parametrize("cfg_kw", [
+    {},                                        # plain GQA
+    {"sliding_window": 8},                     # SWA
+    {"attn_bias": True, "num_kv_heads": 4},    # MHA + bias
+    {"tie_embeddings": True},
+])
+def test_decode_matches_forward_dense(cfg_kw):
+    """Cached decode must reproduce the full-sequence forward logits."""
+    cfg = tiny_dense(**cfg_kw)
+    params = init_params(cfg, jax.random.key(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    full = _greedy_forward_logits(cfg, params, toks)
+    cache = init_cache(cfg, B, 32)
+    outs = []
+    for t in range(S):
+        logits, cache = decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32))
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.array(dec), np.array(full),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_decode_matches_forward_ssm():
+    cfg = ModelConfig(name="s", arch_type="ssm", num_layers=2, d_model=64,
+                      vocab_size=64, ssm_state=8)
+    params = init_params(cfg, jax.random.key(0))
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, 64)
+    full = _greedy_forward_logits(cfg, params, toks)
+    cache = init_cache(cfg, B, 32)
+    outs = []
+    for t in range(S):
+        logits, cache = decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32))
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.array(dec), np.array(full),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_decode_matches_forward_mla():
+    cfg = ModelConfig(name="m", arch_type="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=64,
+                      mla=True, q_lora_rank=32, kv_lora_rank=16,
+                      qk_rope_dim=8, qk_nope_dim=16, v_head_dim=16)
+    params = init_params(cfg, jax.random.key(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, 64)
+    full = _greedy_forward_logits(cfg, params, toks)
+    cache = init_cache(cfg, B, 16)
+    outs = []
+    for t in range(S):
+        logits, cache = decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32))
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.array(dec), np.array(full),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_swa_ring_buffer_beyond_window():
+    """Decode past the window: ring buffer keeps only the last W keys and
+    still matches the full forward (which masks to the window)."""
+    cfg = tiny_dense(sliding_window=6)
+    params = init_params(cfg, jax.random.key(0))
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    full = _greedy_forward_logits(cfg, params, toks)
+    cache = init_cache(cfg, B, 6)   # cache = window slots only
+    assert cache["layers"]["l0"]["k"].shape[2] == 6
+    for t in range(S):
+        logits, cache = decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.array(logits), np.array(full[:, -1]),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_swa_attention_is_windowed():
+    """Changing tokens outside the window must not change the last logits."""
+    cfg = tiny_dense(sliding_window=4, num_layers=1)
+    params = init_params(cfg, jax.random.key(0))
+    t1 = jnp.zeros((1, 12), jnp.int32)
+    t2 = t1.at[:, 0].set(7)  # outside the window of the last position
+    l1 = _greedy_forward_logits(cfg, params, t1)[:, -1]
+    l2 = _greedy_forward_logits(cfg, params, t2)[:, -1]
+    np.testing.assert_allclose(np.array(l1), np.array(l2), atol=1e-5)
+
+
+def test_causality():
+    """Future tokens must not affect earlier logits."""
+    cfg = tiny_dense()
+    params = init_params(cfg, jax.random.key(0))
+    t1 = jnp.zeros((1, 8), jnp.int32)
+    t2 = t1.at[:, -1].set(9)
+    l1 = _greedy_forward_logits(cfg, params, t1)
+    l2 = _greedy_forward_logits(cfg, params, t2)
+    np.testing.assert_allclose(np.array(l1[:, :-1]), np.array(l2[:, :-1]),
+                               atol=1e-5)
+
+
+def test_moe_capacity_and_aux_loss():
+    cfg = ModelConfig(name="moe", arch_type="moe", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      num_experts=4, moe_top_k=2, moe_d_ff=32,
+                      router_aux_weight=0.1)
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(2), (2, 16), 0, 64)
+    l = loss_fn(cfg, params, {"tokens": toks})
+    assert jnp.isfinite(l)
+    # aux weight should contribute: same model, zero aux weight
+    import dataclasses
+    cfg0 = dataclasses.replace(cfg, router_aux_weight=0.0)
+    l0 = loss_fn(cfg0, params, {"tokens": toks})
+    assert float(l) > float(l0)
+
+
+def test_whisper_encode_for_decode_consistency():
+    cfg = ModelConfig(name="w", arch_type="audio", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=64,
+                      norm_kind="ln", mlp_kind="gelu", pos_kind="sinusoidal",
+                      encoder_layers=2, encoder_seq=12, cross_attention=True,
+                      frontend="audio")
+    params = init_params(cfg, jax.random.key(0))
+    B, S = 2, 8
+    audio = jax.random.normal(jax.random.key(3), (B, 12, 64))
+    toks = jax.random.randint(jax.random.key(4), (B, S), 0, 64)
+    full = _greedy_forward_logits(cfg, params, toks, {"audio_embeds": audio})
+    cache = init_cache(cfg, B, 16)
+    cache = encode_for_decode(cfg, params, cache, audio)
+    for t in range(S):
+        logits, cache = decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.array(logits), np.array(full[:, -1]),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_mamba_chunk_boundary_consistency():
+    """Sequence crossing several scan chunks == one-token recurrence."""
+    from repro.models import layers as L
+    cfg = ModelConfig(name="s", arch_type="ssm", num_layers=1, d_model=32,
+                      vocab_size=16, ssm_state=4)
+    params = init_params(cfg, jax.random.key(0))
+    p = jax.tree.map(lambda x: x[0], params["layers"]["l0"]["mamba"])
+    B, S = 1, 20
+    x = jax.random.normal(jax.random.key(5), (B, S, 32))
+    import repro.models.layers as LL
+    old = LL.MAMBA_CHUNK
+    LL.MAMBA_CHUNK = 8   # force multiple chunks
+    try:
+        y_full = L.mamba(cfg, p, x)
+    finally:
+        LL.MAMBA_CHUNK = old
+    cache = {"h": jnp.zeros((B, cfg.d_inner, 4)),
+             "conv": jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner))}
+    ys = []
+    for t in range(S):
+        yt, cache = L.mamba_decode(cfg, p, x[:, t], cache)
+        ys.append(yt[:, 0])
+    y_dec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.array(y_full), np.array(y_dec),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_vlm_patch_positions_and_loss_mask():
+    cfg = ModelConfig(name="v", arch_type="vlm", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      pos_kind="mrope", mrope_sections=(4, 2, 2),
+                      frontend="vision", num_frontend_tokens=4)
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(6), (2, 8), 0, 64)
+    pe = jax.random.normal(jax.random.key(7), (2, 4, 32))
+    l = loss_fn(cfg, params, {"tokens": toks, "patch_embeds": pe})
+    assert jnp.isfinite(l)

@@ -1,0 +1,109 @@
+"""Hypothesis property-based tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sketch as S
+from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
+
+KIND = st.sampled_from(["gaussian", "srht", "countsketch"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=KIND, n=st.integers(4, 400), seed=st.integers(0, 2**31 - 1),
+       a=st.floats(-5, 5, allow_nan=False), b=st.floats(-5, 5, allow_nan=False))
+def test_sketch_linearity_property(kind, n, seed, a, b):
+    """Property 1 holds for every size/seed/coefficient combination."""
+    cfg = S.SketchConfig(kind=kind, ratio=0.5, min_b=4)
+    key = jax.random.key(seed)
+    kv = jax.random.key(seed + 1)
+    v = jax.random.normal(kv, (n,))
+    w = jax.random.normal(jax.random.fold_in(kv, 1), (n,))
+    lhs = S.sk_leaf(cfg, key, a * v + b * w)
+    rhs = a * S.sk_leaf(cfg, key, v) + b * S.sk_leaf(cfg, key, w)
+    scale = float(jnp.abs(lhs).max()) + 1.0
+    np.testing.assert_allclose(np.array(lhs), np.array(rhs),
+                               atol=5e-4 * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=KIND, n=st.integers(8, 300), seed=st.integers(0, 2**31 - 1))
+def test_roundtrip_shape_and_finite(kind, n, seed):
+    cfg = S.SketchConfig(kind=kind, ratio=0.3, min_b=4)
+    key = jax.random.key(seed)
+    v = jax.random.normal(jax.random.fold_in(key, 7), (n,))
+    rt = S.desk_leaf(cfg, key, S.sk_leaf(cfg, key, v), n)
+    assert rt.shape == (n,)
+    assert bool(jnp.isfinite(rt).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 2000), ratio=st.floats(0.001, 1.0))
+def test_sketch_size_monotone_and_bounded(n, ratio):
+    cfg = S.SketchConfig(kind="countsketch", ratio=ratio, min_b=2)
+    b = S.leaf_sketch_size(n, cfg)
+    assert 1 <= b <= n
+    cfg2 = S.SketchConfig(kind="countsketch", ratio=min(1.0, ratio * 2),
+                          min_b=2)
+    assert S.leaf_sketch_size(n, cfg2) >= b
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       steps=st.integers(1, 8))
+def test_amsgrad_vhat_never_decreases(seed, steps):
+    """Alg. 2 invariant: v-hat is element-wise non-decreasing."""
+    cfg = AdaConfig(name="amsgrad", lr=0.01)
+    key = jax.random.key(seed)
+    params = {"w": jax.random.normal(key, (16,))}
+    state = init_opt_state(cfg, params)
+    prev = np.zeros(16)
+    for t in range(steps):
+        u = {"w": jax.random.normal(jax.random.fold_in(key, t), (16,))}
+        params, state = apply_update(cfg, state, params, u)
+        vh = np.array(state["vhat"]["w"])
+        assert (vh >= prev - 1e-12).all()
+        prev = vh
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_update_descends_along_update_direction(seed):
+    """ADA_OPT always moves against the (sign of the) update direction
+    coordinate-wise (positive preconditioner)."""
+    cfg = AdaConfig(name="amsgrad", lr=0.1)
+    key = jax.random.key(seed)
+    params = {"w": jax.random.normal(key, (8,))}
+    u = {"w": jax.random.normal(jax.random.fold_in(key, 1), (8,))}
+    p2, _ = apply_update(cfg, init_opt_state(cfg, params), params, u)
+    dw = np.array(p2["w"] - params["w"])
+    uw = np.array(u["w"])
+    nz = np.abs(uw) > 1e-6
+    assert (np.sign(dw[nz]) == -np.sign(uw[nz])).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 9))
+def test_fwht_energy_preservation(n):
+    """Parseval: ||Hx||^2 = n ||x||^2 for the unnormalized transform."""
+    size = 1 << n
+    x = jax.random.normal(jax.random.key(n), (size,))
+    y = S.fwht(x)
+    np.testing.assert_allclose(float(y @ y), size * float(x @ x), rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), g=st.integers(1, 5))
+def test_sketch_mergeability(seed, g):
+    """Mean of client sketches == sketch of client mean (exact, any G)."""
+    cfg = S.SketchConfig(kind="countsketch", ratio=0.5, min_b=4)
+    key = jax.random.key(seed)
+    vs = [jax.random.normal(jax.random.fold_in(key, i), (64,))
+          for i in range(g)]
+    sks = [S.sk_leaf(cfg, key, v) for v in vs]
+    mean_sk = sum(np.array(s) for s in sks) / g
+    sk_mean = np.array(S.sk_leaf(cfg, key, sum(vs) / g))
+    np.testing.assert_allclose(mean_sk, sk_mean, atol=1e-4)

@@ -1,0 +1,141 @@
+"""Integration tests for the SAFL round (Algorithm 1)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaConfig
+from repro.core.safl import (SAFLConfig, client_delta, fedopt_round,
+                             init_safl, safl_round, split_client_batches,
+                             uplink_bits_per_round)
+from repro.core.sketch import SketchConfig
+
+
+def _task():
+    key = jax.random.key(0)
+    W = jax.random.normal(jax.random.fold_in(key, 1), (16, 4))
+
+    def make_batch(k, n=32):
+        x = jax.random.normal(k, (n, 16))
+        return {"x": x, "y": x @ W}
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["W"] - batch["y"]) ** 2)
+
+    params = {"W": jnp.zeros((16, 4))}
+    return params, loss_fn, make_batch
+
+
+def _run(cfg, rounds=150, clients=4, k=2):
+    params, loss_fn, make_batch = _task()
+    opt = init_safl(cfg, params)
+    rj = jax.jit(functools.partial(safl_round, cfg, loss_fn))
+    key = jax.random.key(9)
+    for t in range(rounds):
+        b = split_client_batches(make_batch(jax.random.fold_in(key, t)), clients, k)
+        params, opt, m = rj(params, opt, b, jax.random.key(t))
+    return float(m["loss"])
+
+
+def test_safl_converges_uncompressed():
+    cfg = SAFLConfig(sketch=SketchConfig(kind="none"),
+                     server=AdaConfig(name="amsgrad", lr=0.05),
+                     client_lr=0.05, local_steps=2)
+    assert _run(cfg, rounds=80) < 0.05
+
+
+@pytest.mark.parametrize("kind", ["countsketch", "srht", "gaussian"])
+def test_safl_converges_sketched(kind):
+    cfg = SAFLConfig(sketch=SketchConfig(kind=kind, ratio=0.5, min_b=8),
+                     server=AdaConfig(name="amsgrad", lr=0.05),
+                     client_lr=0.05, local_steps=2)
+    assert _run(cfg, rounds=250) < 0.2
+
+
+def test_larger_sketch_converges_faster():
+    """The paper's monotonicity claim (Fig. 1 right): training error after a
+    fixed budget decreases with sketch size b."""
+    losses = {}
+    for ratio in (0.125, 1.0):
+        cfg = SAFLConfig(
+            sketch=SketchConfig(kind="countsketch", ratio=ratio, min_b=4),
+            server=AdaConfig(name="amsgrad", lr=0.05),
+            client_lr=0.05, local_steps=2)
+        losses[ratio] = _run(cfg, rounds=120)
+    assert losses[1.0] < losses[0.125]
+
+
+def test_sketch_none_equals_fedopt():
+    """SAFL with the identity compressor IS FedOPT (same trajectory)."""
+    params, loss_fn, make_batch = _task()
+    cfg = SAFLConfig(sketch=SketchConfig(kind="none"),
+                     server=AdaConfig(name="amsgrad", lr=0.05),
+                     client_lr=0.05, local_steps=2)
+    p1, o1 = params, init_safl(cfg, params)
+    p2, o2 = params, init_safl(cfg, params)
+    for t in range(5):
+        b = split_client_batches(make_batch(jax.random.key(t)), 4, 2)
+        p1, o1, _ = safl_round(cfg, loss_fn, p1, o1, b, jax.random.key(t))
+        p2, o2, _ = fedopt_round(cfg, loss_fn, p2, o2, b, jax.random.key(t))
+    np.testing.assert_allclose(np.array(p1["W"]), np.array(p2["W"]), atol=1e-6)
+
+
+def test_client_delta_is_k_sgd_steps():
+    params, loss_fn, make_batch = _task()
+    cfg = SAFLConfig(client_lr=0.1, local_steps=3, remat_local=False)
+    batch = make_batch(jax.random.key(5), n=6)
+    mbs = jax.tree.map(lambda x: x.reshape(3, 2, *x.shape[1:]), batch)
+    delta, _ = client_delta(cfg, loss_fn, params, mbs, jnp.asarray(0.1))
+    # manual 3 SGD steps
+    p = params
+    for k in range(3):
+        mb = jax.tree.map(lambda x: x[k], mbs)
+        g = jax.grad(loss_fn)(p, mb)
+        p = jax.tree.map(lambda a, b: a - 0.1 * b, p, g)
+    np.testing.assert_allclose(np.array(delta["W"]),
+                               np.array(params["W"] - p["W"]), rtol=1e-5)
+
+
+def test_sketch_average_equals_average_sketch():
+    """Property 1 in action: averaging sketches == sketching the average,
+    so the server needs no second compression round."""
+    from repro.core.sketch import sketch_tree
+    cfg = SketchConfig(kind="countsketch", ratio=0.5, min_b=8)
+    key = jax.random.key(2)
+    trees = [{"w": jax.random.normal(jax.random.key(i), (64,))} for i in range(4)]
+    sks = [sketch_tree(cfg, key, t) for t in trees]
+    avg_sk = jax.tree.map(lambda *xs: sum(xs) / 4, *sks)
+    mean_tree = jax.tree.map(lambda *xs: sum(xs) / 4, *trees)
+    sk_avg = sketch_tree(cfg, key, mean_tree)
+    np.testing.assert_allclose(np.array(avg_sk["w"]), np.array(sk_avg["w"]),
+                               atol=1e-5)
+
+
+def test_uplink_bits_scale_with_ratio():
+    params = {"w": jnp.zeros((10000,))}
+    mk = lambda r: SAFLConfig(sketch=SketchConfig(
+        kind="countsketch", ratio=r, min_b=1))
+    assert uplink_bits_per_round(mk(0.01), params) * 10 == \
+        uplink_bits_per_round(mk(0.1), params)
+
+
+def test_split_client_batches_shapes():
+    b = {"tokens": jnp.zeros((24, 7))}
+    out = split_client_batches(b, 4, 3)
+    assert out["tokens"].shape == (4, 3, 2, 7)
+
+
+def test_metrics_finite_and_moments_populated():
+    params, loss_fn, make_batch = _task()
+    cfg = SAFLConfig(sketch=SketchConfig(kind="countsketch", ratio=0.25, min_b=4),
+                     server=AdaConfig(name="amsgrad", lr=0.01),
+                     client_lr=0.05, local_steps=2)
+    opt = init_safl(cfg, params)
+    b = split_client_batches(make_batch(jax.random.key(0)), 4, 2)
+    p, opt, m = safl_round(cfg, loss_fn, params, opt, b, jax.random.key(1))
+    assert jnp.isfinite(m["loss"])
+    assert float(jnp.abs(opt["m"]["W"]).sum()) > 0
+    assert float(opt["vhat"]["W"].max()) > 0

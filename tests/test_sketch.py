@@ -1,0 +1,128 @@
+"""Unit tests for the sketching operators (paper §3.2 Properties 1-3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketch as S
+
+KINDS = ["gaussian", "srht", "countsketch"]
+
+
+def _cfg(kind, ratio=0.5, **kw):
+    return S.SketchConfig(kind=kind, ratio=ratio, min_b=8, **kw)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_linearity_exact(kind):
+    """Property 1: sk(av + bw) == a sk(v) + b sk(w) (same seed) exactly."""
+    cfg = _cfg(kind)
+    key = jax.random.key(3)
+    v = jax.random.normal(jax.random.key(1), (300,))
+    w = jax.random.normal(jax.random.key(2), (300,))
+    lhs = S.sk_leaf(cfg, key, 2.0 * v - 3.0 * w)
+    rhs = 2.0 * S.sk_leaf(cfg, key, v) - 3.0 * S.sk_leaf(cfg, key, w)
+    np.testing.assert_allclose(np.array(lhs), np.array(rhs), atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_desk_linearity(kind):
+    cfg = _cfg(kind)
+    key = jax.random.key(4)
+    b = S.leaf_sketch_size(200, cfg)
+    s1 = jax.random.normal(jax.random.key(5), (b,))
+    s2 = jax.random.normal(jax.random.key(6), (b,))
+    lhs = S.desk_leaf(cfg, key, s1 + s2, 200)
+    rhs = S.desk_leaf(cfg, key, s1, 200) + S.desk_leaf(cfg, key, s2, 200)
+    np.testing.assert_allclose(np.array(lhs), np.array(rhs), atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_unbiasedness(kind):
+    """Property 2: E[desk(sk(v))] == v, estimated over many seeds."""
+    cfg = _cfg(kind, ratio=0.5)
+    v = jax.random.normal(jax.random.key(7), (128,))
+    n_trials = 600
+    acc = jnp.zeros_like(v)
+    for t in range(n_trials):
+        key = jax.random.key(100 + t)
+        acc = acc + S.desk_leaf(cfg, key, S.sk_leaf(cfg, key, v), 128)
+    mean = acc / n_trials
+    rel = float(jnp.linalg.norm(mean - v) / jnp.linalg.norm(v))
+    # std of the mean ~ sqrt(n/b / T) ~ sqrt(2/600) ~ 0.06
+    assert rel < 0.2, rel
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_inner_product_concentration(kind):
+    """Property 3: <desk(sk(v)), h> concentrates around <v, h>."""
+    cfg = _cfg(kind, ratio=0.5)
+    v = jax.random.normal(jax.random.key(8), (256,))
+    h = jax.random.normal(jax.random.key(9), (256,))
+    target = float(v @ h)
+    scale = float(jnp.linalg.norm(v) * jnp.linalg.norm(h))
+    errs = []
+    for t in range(100):
+        key = jax.random.key(200 + t)
+        rt = S.desk_leaf(cfg, key, S.sk_leaf(cfg, key, v), 256)
+        errs.append(abs(float(rt @ h) - target) / scale)
+    # median deviation should be well under ~ 1/sqrt(b) * polylog
+    assert float(np.median(errs)) < 0.5, np.median(errs)
+
+
+def test_sketch_sizes_and_bits():
+    cfg = _cfg("countsketch", ratio=0.1)
+    tree = {"a": jnp.zeros((100,)), "b": jnp.zeros((50, 10))}
+    sizes = S.tree_sketch_sizes(cfg, tree)
+    assert sizes == [10, 50]
+    assert S.total_sketch_bits(cfg, tree) == (10 + 50) * 32
+
+
+def test_none_kind_identity():
+    cfg = S.SketchConfig(kind="none")
+    v = jnp.arange(16.0)
+    assert jnp.allclose(S.sk_leaf(cfg, jax.random.key(0), v), v)
+
+
+def test_tree_roundtrip_shapes_dtypes():
+    cfg = _cfg("countsketch", ratio=0.3)
+    tree = {"w": jnp.ones((12, 7), jnp.bfloat16), "b": jnp.ones((5,))}
+    rt = S.roundtrip_tree(cfg, jax.random.key(0), tree)
+    assert rt["w"].shape == (12, 7) and rt["w"].dtype == jnp.bfloat16
+    assert rt["b"].shape == (5,)
+
+
+def test_concat_mode_matches_paper_algorithm():
+    """concat mode sketches the full concatenated vector (Alg. 1 verbatim)."""
+    cfg = S.SketchConfig(kind="countsketch", ratio=0.5, min_b=8, mode="concat")
+    tree = {"a": jnp.arange(10.0), "b": jnp.ones((4, 4))}
+    sk = S.sketch_tree(cfg, jax.random.key(1), tree)
+    assert sk.ndim == 1 and sk.shape[0] == S.leaf_sketch_size(26, cfg)
+    rt = S.desketch_tree(cfg, jax.random.key(1), sk, tree)
+    assert rt["a"].shape == (10,) and rt["b"].shape == (4, 4)
+
+
+def test_fwht_orthogonality():
+    """H H^T = n I for the unnormalized transform."""
+    n = 64
+    eye = jnp.eye(n)
+    H = jax.vmap(S.fwht)(eye)
+    np.testing.assert_allclose(np.array(H @ H.T), n * np.eye(n), atol=1e-3)
+
+
+def test_fwht_matches_reference():
+    for n in (4, 32, 256):
+        x = np.random.RandomState(0).randn(n).astype(np.float32)
+        np.testing.assert_allclose(
+            np.array(S.fwht(jnp.array(x))), S.fwht_reference(x), rtol=1e-4)
+
+
+def test_transport_dtype_bf16():
+    """Beyond-paper: bf16 sketch transport halves uplink bits."""
+    cfg32 = _cfg("countsketch", ratio=0.25)
+    cfg16 = _cfg("countsketch", ratio=0.25, transport_dtype=jnp.bfloat16)
+    tree = {"w": jnp.zeros((1000,))}
+    assert S.total_sketch_bits(cfg16, tree) * 2 == S.total_sketch_bits(cfg32, tree)
+    sk = S.sketch_tree(cfg16, jax.random.key(0), tree)
+    assert jax.tree.leaves(sk)[0].dtype == jnp.bfloat16

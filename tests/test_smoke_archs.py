@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests: a REDUCED same-family variant of every
+assigned config runs one SAFL train round + one decode step on CPU,
+asserting output shapes and no NaNs (deliverable f)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core.adaptive import AdaConfig
+from repro.core.safl import SAFLConfig, init_safl, safl_round
+from repro.core.sketch import SketchConfig
+from repro.models import (count_params_analytic, decode_step, init_cache,
+                          init_params, loss_fn)
+
+SAFL = SAFLConfig(
+    sketch=SketchConfig(kind="countsketch", ratio=0.05, min_b=16),
+    server=AdaConfig(name="amsgrad", lr=1e-3),
+    client_lr=0.02, local_steps=2)
+
+
+def _batch_for(cfg, G=2, K=2, mb=2, S=16):
+    key = jax.random.key(0)
+    P = cfg.num_frontend_tokens if cfg.frontend == "vision" else 0
+    batch = {"tokens": jax.random.randint(key, (G, K, mb, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (G, K, mb, P, cfg.d_model), cfg.dtype) * 0.02
+    if cfg.frontend == "audio":
+        batch["audio_embeds"] = jax.random.normal(
+            key, (G, K, mb, cfg.encoder_seq, cfg.d_model), cfg.dtype) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_round(arch):
+    cfg = get_config(arch, smoke=True)
+    assert count_params_analytic(cfg) < 50e6, "smoke variant too large"
+    params = init_params(cfg, jax.random.key(0))
+    opt = init_safl(SAFL, params)
+    batch = _batch_for(cfg)
+    loss = lambda p, b: loss_fn(cfg, p, b)
+    p2, opt2, m = jax.jit(functools.partial(safl_round, SAFL, loss))(
+        params, opt, batch, jax.random.key(1))
+    assert jnp.isfinite(m["loss"]), (arch, m)
+    # params changed and stayed finite
+    moved = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert moved > 0
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(p2)), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.key(0))
+    B = 2
+    cache = init_cache(cfg, B, 32)
+    logits, cache2 = jax.jit(
+        lambda p, c, t, i: decode_step(cfg, p, c, t, i))(
+        params, cache, jnp.zeros((B, 1), jnp.int32), jnp.asarray(3, jnp.int32))
+    assert logits.shape == (B, cfg.vocab_size), arch
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expect = {
+        "falcon_mamba_7b": dict(num_layers=64, d_model=4096, vocab_size=65024,
+                                ssm_state=16),
+        "whisper_large_v3": dict(num_layers=32, d_model=1280, num_heads=20,
+                                 num_kv_heads=20, d_ff=5120, vocab_size=51866),
+        "jamba_1_5_large_398b": dict(num_layers=72, d_model=8192,
+                                     num_heads=64, num_kv_heads=8,
+                                     d_ff=24576, vocab_size=65536,
+                                     num_experts=16, moe_top_k=2),
+        "qwen2_vl_7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                            num_kv_heads=4, d_ff=18944, vocab_size=152064),
+        "h2o_danube_1_8b": dict(num_layers=24, d_model=2560, num_heads=32,
+                                num_kv_heads=8, d_ff=6912, vocab_size=32000),
+        "llama3_2_1b": dict(num_layers=16, d_model=2048, num_heads=32,
+                            num_kv_heads=8, d_ff=8192, vocab_size=128256),
+        "qwen1_5_4b": dict(num_layers=40, d_model=2560, num_heads=20,
+                           num_kv_heads=20, d_ff=6912, vocab_size=151936,
+                           attn_bias=True),
+        "deepseek_v3_671b": dict(num_layers=61, d_model=7168, num_heads=128,
+                                 num_kv_heads=128, vocab_size=129280,
+                                 num_experts=256, moe_top_k=8, moe_d_ff=2048),
+        "qwen2_7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                         num_kv_heads=4, d_ff=18944, vocab_size=152064),
+        "dbrx_132b": dict(num_layers=40, d_model=6144, num_heads=48,
+                          num_kv_heads=8, d_ff=10752, vocab_size=100352,
+                          num_experts=16, moe_top_k=4),
+        "bert_100m": dict(num_layers=12, d_model=768),
+        "vit_base_86m": dict(num_layers=12, d_model=768),
+    }[arch]
+    for k, v in expect.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_param_counts_near_published():
+    """Analytic parameter counts land near the published sizes."""
+    targets = {
+        "falcon_mamba_7b": (7.27e9, 0.10),
+        "jamba_1_5_large_398b": (398e9, 0.05),
+        "deepseek_v3_671b": (671e9, 0.02),
+        "dbrx_132b": (132e9, 0.05),
+        "llama3_2_1b": (1.24e9, 0.05),
+        "qwen2_7b": (7.6e9, 0.05),
+    }
+    for arch, (target, tol) in targets.items():
+        n = count_params_analytic(get_config(arch))
+        assert abs(n - target) / target < tol, (arch, n, target)

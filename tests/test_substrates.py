@@ -1,0 +1,104 @@
+"""Data pipeline, schedules, checkpointing, intrinsic dimension."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.intrinsic_dim import intrinsic_dimension, make_hvp
+from repro.data import (BigramLMData, ClsDataConfig, GaussianClsData,
+                        LMDataConfig)
+from repro.optim import constant, cosine, inv_sqrt, sketch_size_schedule
+
+
+def test_lm_data_shapes_and_determinism():
+    data = BigramLMData(LMDataConfig(vocab_size=32, seq_len=8, num_clients=3))
+    b1 = data.round_batch(4, 2, seed=7)
+    b2 = data.round_batch(4, 2, seed=7)
+    assert b1["tokens"].shape == (3, 2, 2, 8)
+    np.testing.assert_array_equal(np.array(b1["tokens"]),
+                                  np.array(b2["tokens"]))
+    assert int(b1["tokens"].max()) < 32
+
+
+def test_lm_data_heterogeneity():
+    """Dirichlet-skewed clients produce different token statistics."""
+    iid = BigramLMData(LMDataConfig(vocab_size=16, seq_len=64, num_clients=2,
+                                    heterogeneity=0.0))
+    het = BigramLMData(LMDataConfig(vocab_size=16, seq_len=64, num_clients=2,
+                                    heterogeneity=1.0))
+    assert np.allclose(iid.trans[0], iid.trans[1])
+    assert not np.allclose(het.trans[0], het.trans[1])
+
+
+def test_cls_data_label_skew():
+    d = GaussianClsData(ClsDataConfig(num_clients=3, dirichlet_alpha=0.1))
+    probs = d.label_probs
+    assert probs.shape == (3, 10)
+    assert not np.allclose(probs[0], probs[1])
+    b = d.round_batch(8, 2, seed=0)
+    assert b["x"].shape == (3, 2, 4, 32)
+    assert b["y"].shape == (3, 2, 4)
+
+
+def test_schedules():
+    t = jnp.arange(10)
+    assert float(constant()(t)[5]) == 1.0
+    s = inv_sqrt(1.0)(t)
+    assert float(s[0]) == 1.0 and float(s[3]) == 0.5
+    c = cosine(100, warmup=10)(jnp.asarray([0, 10, 100]))
+    assert float(c[0]) == 0.0 and abs(float(c[1]) - 1.0) < 1e-5
+    assert float(c[2]) < 0.01
+    sk = sketch_size_schedule(0.01, 100, final_frac=4.0)
+    assert sk(0) == 0.01 and abs(sk(100) - 0.04) < 1e-9
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, tree, step=7)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = restore_checkpoint(path, like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.array(a, np.float32),
+                                      np.array(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"w": jnp.ones((3,))}
+    path = os.path.join(tmp_path, "c2")
+    save_checkpoint(path, tree)
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, {"w": jnp.ones((4,))})
+
+
+def test_hvp_and_intrinsic_dim_quadratic():
+    """For L(x) = 0.5 x^T A x the Hessian is A: intrinsic dim and lambda_max
+    must match the known spectrum."""
+    eigs = jnp.array([4.0, 2.0, 1.0, 0.5, 0.25, 0.1, 0.05, 0.0])
+    d = eigs.shape[0]
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.key(0), (d, d)))
+    A = q @ jnp.diag(eigs) @ q.T
+
+    def loss_fn(params, batch):
+        x = params["x"]
+        return 0.5 * x @ A @ x
+
+    params = {"x": jax.random.normal(jax.random.key(1), (d,))}
+    mv, dim = make_hvp(loss_fn, params, None)
+    v = jax.random.normal(jax.random.key(2), (d,))
+    np.testing.assert_allclose(np.array(mv(v)), np.array(A @ v),
+                               rtol=1e-4, atol=1e-5)
+
+    out = intrinsic_dimension(loss_fn, params, None, num_iters=d,
+                              num_probes=4)
+    want_I = float(jnp.abs(eigs).sum() / jnp.abs(eigs).max())
+    assert abs(out["lambda_max"] - 4.0) < 0.05
+    assert abs(out["intrinsic_dim"] - want_I) / want_I < 0.35
