@@ -9,13 +9,18 @@ Prints ``name,us_per_call,derived`` CSV rows.
   table1_comm_bits      : per-round uplink bits per algorithm (paper Table 1)
   fig5_hessian_spectrum : intrinsic dimension of the loss Hessian (Fig. 5)
   sketch_ops            : raw sk/desk operator throughput (pure-jnp + Pallas)
+                          + packed-engine vs per-leaf round-trip comparison
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--json]
+
+``--json`` additionally writes BENCH_sketch.json (name -> us_per_call) so
+the perf trajectory is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
 import functools
+import json
 import sys
 import time
 
@@ -27,12 +32,23 @@ from repro.core.adaptive import AdaConfig
 from repro.core.baselines import (BaselineConfig, baseline_round,
                                   init_baseline_state, uplink_bits)
 from repro.core.intrinsic_dim import intrinsic_dimension
+from repro.core.packed import (derive_round_params, desk_packed,
+                               make_packing_plan, sk_packed)
 from repro.core.safl import SAFLConfig, init_safl, safl_round
-from repro.core.sketch import SketchConfig, sk_leaf, total_sketch_bits
+from repro.core.sketch import (SketchConfig, desketch_tree, sk_leaf,
+                               sketch_tree, total_sketch_bits)
 from repro.data import BigramLMData, LMDataConfig
 from repro.models import ModelConfig, init_params, loss_fn
 
 QUICK = "--quick" in sys.argv
+JSON_OUT = "BENCH_sketch.json" if "--json" in sys.argv else None
+
+_ROWS: dict[str, float] = {}
+
+
+def _emit(name: str, us: float, derived: str = "") -> None:
+    _ROWS[name] = us
+    print(f"{name},{us:.0f},{derived}")
 
 # the paper's three experimental regimes, at laptop scale: a small LM plays
 # the role of ResNet/ViT/BERT (same optimizer/compressor mechanics).
@@ -115,14 +131,14 @@ def fig1_resnet_scratch():
     for algo in ("safl", "fedopt", "fedavg", "fetchsgd", "topk_ef",
                  "onebit_adam", "cocktail", "marina"):
         final, us, bits = _train(algo)
-        print(f"fig1/{algo},{us:.0f},final_loss={final:.4f};uplink_bits={bits}")
+        _emit(f"fig1/{algo}", us, f"final_loss={final:.4f};uplink_bits={bits}")
 
 
 def fig2_finetune():
     """Paper Fig. 2: finetuning regime comparison."""
     for algo in ("safl", "onebit_adam", "fetchsgd"):
         final, us, bits = _train(algo, seed=7, rounds=(5 if QUICK else 30))
-        print(f"fig2/{algo},{us:.0f},final_loss={final:.4f}")
+        _emit(f"fig2/{algo}", us, f"final_loss={final:.4f}")
 
 
 def fig3_sketch_sizes():
@@ -130,7 +146,7 @@ def fig3_sketch_sizes():
     in b; tiny b still converges)."""
     for ratio in (0.01, 0.05, 0.2, 1.0):
         final, us, bits = _train("safl", sketch_ratio=ratio)
-        print(f"fig3/ratio_{ratio},{us:.0f},final_loss={final:.4f};bits={bits}")
+        _emit(f"fig3/ratio_{ratio}", us, f"final_loss={final:.4f};bits={bits}")
 
 
 def table1_comm_bits():
@@ -148,7 +164,7 @@ def table1_comm_bits():
                                                  ratio=0.01, min_b=8))
         rows[name] = uplink_bits(cfg, params)
     for k, v in rows.items():
-        print(f"table1/{k},0,uplink_bits={v};ratio_vs_dense={v / (d * 32):.4f}")
+        _emit(f"table1/{k}", 0.0, f"uplink_bits={v};ratio_vs_dense={v / (d * 32):.4f}")
 
 
 def fig5_hessian_spectrum():
@@ -162,25 +178,70 @@ def fig5_hessian_spectrum():
                               batch, num_iters=(8 if QUICK else 20),
                               num_probes=(1 if QUICK else 2))
     us = (time.perf_counter() - t0) * 1e6
-    print(f"fig5/intrinsic_dim,{us:.0f},"
+    _emit("fig5/intrinsic_dim", us,
           f"I={out['intrinsic_dim']:.1f};ambient_d={out['ambient_dim']};"
           f"ratio={out['intrinsic_dim'] / out['ambient_dim']:.2e}")
 
 
 def sketch_ops():
     """Raw operator cost: sk over a 1M-dim vector, jnp vs Pallas route."""
-    n, b = 1 << 20, 1 << 12
+    n, b = (1 << 18, 1 << 10) if QUICK else (1 << 20, 1 << 12)
     v = jax.random.normal(jax.random.key(0), (n,))
     key = jax.random.key(1)
     for kind in ("countsketch", "srht"):
         cfg = SketchConfig(kind=kind, ratio=b / n, min_b=b)
         f = jax.jit(lambda vv: sk_leaf(cfg, key, vv))
         us = _timer(f, v)
-        print(f"sketch_ops/{kind}_jnp,{us:.0f},n={n};b={b}")
+        _emit(f"sketch_ops/{kind}_jnp", us, f"n={n};b={b}")
     from repro.kernels import ops
     h = jax.random.randint(jax.random.key(2), (n,), 0, b)
     us = _timer(lambda: ops.countsketch(v, h, b))
-    print(f"sketch_ops/countsketch_pallas_interp,{us:.0f},n={n};b={b}")
+    _emit("sketch_ops/countsketch_pallas_interp", us, f"n={n};b={b}")
+    packed_vs_perleaf()
+
+
+def packed_vs_perleaf():
+    """Fused packed-engine round trip vs the seed per-leaf loop on the bench
+    model (per-tensor countsketch, same ratio/payload).  The packed path
+    derives hashes/signs ONCE per round (shared by sk and desk) and
+    compresses the whole tree in one fused pass with the scatter-free
+    balanced hash family; the per-leaf loop re-derives per leaf on both
+    sides and scatter-adds leaf by leaf (the pre-packed hot path).  A
+    same-family packed row isolates the pure fusion/derive-once win."""
+    params = init_params(MODEL, jax.random.key(0))
+    key = jax.random.key(3)
+    # seed reference hot path: per-leaf loop, independent-hash countsketch
+    cfg_ref = SketchConfig(kind="countsketch", ratio=0.05, min_b=8,
+                           cs_hash="independent")
+    # production packed path: fused, balanced hash family (default)
+    cfg_pk = SketchConfig(kind="countsketch", ratio=0.05, min_b=8)
+
+    @jax.jit
+    def perleaf_rt(t):
+        return desketch_tree(cfg_ref, key, sketch_tree(cfg_ref, key, t), t)
+
+    def packed_fn(cfg):
+        plan = make_packing_plan(cfg, params)
+
+        @jax.jit
+        def rt(t):
+            rp = derive_round_params(plan, key)
+            return desk_packed(plan, rp, sk_packed(plan, rp, t))
+        return plan, rt
+
+    plan, packed_rt = packed_fn(cfg_pk)
+    _, packed_ind_rt = packed_fn(cfg_ref)
+
+    reps = 20
+    us_perleaf = _timer(perleaf_rt, params, reps=reps)
+    us_packed = _timer(packed_rt, params, reps=reps)
+    us_packed_ind = _timer(packed_ind_rt, params, reps=reps)
+    _emit("sketch_ops/packed_vs_perleaf", us_packed,
+          f"perleaf_us={us_perleaf:.0f};speedup={us_perleaf / us_packed:.2f}x;"
+          f"d={plan.d_total};b_total={plan.b_total};leaves={len(plan.ops)}")
+    _emit("sketch_ops/packed_vs_perleaf_samefamily", us_packed_ind,
+          f"perleaf_us={us_perleaf:.0f};"
+          f"speedup={us_perleaf / us_packed_ind:.2f}x")
 
 
 def main() -> None:
@@ -191,6 +252,10 @@ def main() -> None:
     fig2_finetune()
     fig5_hessian_spectrum()
     sketch_ops()
+    if JSON_OUT:
+        with open(JSON_OUT, "w") as f:
+            json.dump(_ROWS, f, indent=2, sort_keys=True)
+        print(f"# wrote {JSON_OUT} ({len(_ROWS)} rows)")
 
 
 if __name__ == "__main__":

@@ -2,5 +2,8 @@ from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
 from repro.core.safl import (SAFLConfig, client_delta, fedopt_round, init_safl,
                              safl_round, split_client_batches,
                              uplink_bits_per_round)
+from repro.core.packed import (PackingPlan, derive_round_params, desk_packed,
+                               make_packing_plan, roundtrip_packed, sk_packed,
+                               sk_packed_clients)
 from repro.core.sketch import (SketchConfig, desketch_tree, leaf_sketch_size,
                                roundtrip_tree, sketch_tree, total_sketch_bits)

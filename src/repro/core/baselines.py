@@ -36,8 +36,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
+from repro.core.packed import (derive_round_params, desk_flat,
+                               make_packing_plan, pack_tree, sk_flat,
+                               sk_packed_clients, unpack_tree)
 from repro.core.safl import SAFLConfig, client_delta
-from repro.core.sketch import SketchConfig, desk_leaf, sk_leaf
+from repro.core.sketch import SketchConfig
 
 Pytree = Any
 LossFn = Callable[[Pytree, Any], jax.Array]
@@ -104,13 +107,10 @@ def init_baseline_state(cfg: BaselineConfig, params: Pytree, num_clients: int) -
         state["err"] = jax.tree.map(
             lambda p: jnp.zeros((num_clients,) + p.shape, jnp.float32), params)
     if cfg.name == "fetchsgd":
-        from repro.core.sketch import leaf_sketch_size
-        leaves, treedef = jax.tree_util.tree_flatten(params)
-        state["sk_mom"] = jax.tree_util.tree_unflatten(
-            treedef, [jnp.zeros(
-                (leaf_sketch_size(int(jnp.size(l)), cfg.sketch),),
-                jnp.float32) for l in leaves])
-        state["sk_err"] = jax.tree.map(jnp.zeros_like, state["sk_mom"])
+        # sketch-space accumulators live in the packed (b_total,) payload
+        plan = make_packing_plan(cfg.sketch, params)
+        state["sk_mom"] = jnp.zeros((plan.b_total,), jnp.float32)
+        state["sk_err"] = jnp.zeros((plan.b_total,), jnp.float32)
     if cfg.name == "marina":
         state["g"] = f32(params)
         state["prev_params"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
@@ -142,44 +142,34 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
         params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
 
     elif cfg.name in ("topk_ef", "cocktail", "cdadam"):
-        def compress(i, flat):  # flat: (G, n) -- per-client compressor + EF
-            k = max(1, int(flat.shape[1] * cfg.topk_ratio))
-            if cfg.name == "cocktail":
-                def comp_one(g, v):
-                    kk = jax.random.fold_in(jax.random.fold_in(key, i), g)
-                    # biased Rand-K (no n/k inflation -- EF absorbs the bias)
-                    n = v.shape[0]
-                    idx = jax.random.choice(kk, n, (k,), replace=False)
-                    mask = jnp.zeros((n,), v.dtype).at[idx].set(1.0)
-                    sparse = v * mask
-                    # sign-quantize the survivors (scale = mean |.| over k)
-                    scale = jnp.sum(jnp.abs(sparse)) / k
-                    return jnp.sign(sparse) * scale
-                comp = jax.vmap(lambda g, v: comp_one(g, v))(
-                    jnp.arange(G), flat)
-            else:
-                comp = jax.vmap(lambda v: topk_mask(v, k))(flat)
-            return comp
-
-        err_leaves, treedef = jax.tree_util.tree_flatten(state["err"])
-        d_leaves = jax.tree_util.tree_leaves(deltas)
-        new_err, comp_mean = [], []
-        for i, (e, d) in enumerate(zip(err_leaves, d_leaves)):
-            a = (e + d).reshape(G, -1)
-            c = compress(i, a)
-            new_err.append((a - c).reshape(e.shape))
-            comp_mean.append(jnp.mean(c, axis=0).reshape(e.shape[1:]))
-        state["err"] = jax.tree_util.tree_unflatten(treedef, new_err)
-        update = jax.tree_util.tree_unflatten(treedef, comp_mean)
+        # packed layout (DESIGN.md §4): error memory + delta flattened into
+        # one (G, d_total) buffer; the compressor runs ONCE on the packed
+        # vector (global top-k / rand-k, the canonical formulation) instead
+        # of a per-leaf loop.
+        plan = make_packing_plan(cfg.sketch, params)
+        a2 = jax.vmap(lambda t: pack_tree(plan, t))(
+            jax.tree.map(lambda e, d: e + d, state["err"], deltas))
+        k = max(1, int(plan.d_total * cfg.topk_ratio))
+        if cfg.name == "cocktail":
+            def comp_one(g, v):
+                kk = jax.random.fold_in(key, g)
+                # biased Rand-K (no n/k inflation -- EF absorbs the bias)
+                n = v.shape[0]
+                idx = jax.random.choice(kk, n, (k,), replace=False)
+                mask = jnp.zeros((n,), v.dtype).at[idx].set(1.0)
+                sparse = v * mask
+                # sign-quantize the survivors (scale = mean |.| over k)
+                scale = jnp.sum(jnp.abs(sparse)) / k
+                return jnp.sign(sparse) * scale
+            comp = jax.vmap(comp_one)(jnp.arange(G), a2)
+        else:
+            comp = jax.vmap(lambda v: topk_mask(v, k))(a2)
+        state["err"] = jax.vmap(
+            lambda f: unpack_tree(plan, f, cast=False))(a2 - comp)
+        update = unpack_tree(plan, jnp.mean(comp, axis=0), cast=False)
         params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
 
     elif cfg.name == "fetchsgd":
-        skcfg = cfg.sketch
-        d_leaves, treedef = jax.tree_util.tree_flatten(deltas)
-        mom_leaves = jax.tree_util.tree_leaves(state["sk_mom"])
-        errl = jax.tree_util.tree_leaves(state["sk_err"])
-        p_leaves = jax.tree_util.tree_leaves(params)
-        new_mom, new_err, upds = [], [], []
         # NOTE: canonical FetchSGD keeps ONE fixed sketch so momentum/error
         # accumulate coherently -- but that variant provably relies on the
         # heavy-hitter assumption (paper Table 1 note (A)); on dense
@@ -188,28 +178,37 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
         # §Baselines).  We therefore re-key the sketch each round: the
         # sketch-space accumulators then act as unbiased compressed momentum
         # + error smoothing, which is stable without heavy hitters.
-        for i, (d, mom, er, p) in enumerate(zip(d_leaves, mom_leaves, errl, p_leaves)):
-            kl = jax.random.fold_in(key, i)
-            n = int(jnp.size(p))
-            # clients sketch; server averages sketches (mergeable)
-            sks = jax.vmap(lambda v: sk_leaf(skcfg, kl, v.reshape(-1)))(d)
-            s_mean = jnp.mean(sks, axis=0)
-            mom = cfg.fetchsgd_momentum * mom + s_mean
-            er = er + mom
-            dense = desk_leaf(skcfg, kl, er, n)             # unsketch error acc
-            k = max(1, int(n * cfg.topk_ratio))
-            # top-k selection on a desketch picks upward-biased coordinates;
-            # shrink by ~b/n so the applied mass matches the true signal
-            # (without this the EF loop is a positive feedback on dense,
-            # non-heavy-hitter gradients -- see EXPERIMENTS.md §Baselines)
-            shrink = cfg.fetchsgd_shrink or min(1.0, mom.shape[0] / n)
-            upd = topk_mask(dense, k) * shrink               # heavy hitters
-            er = er - sk_leaf(skcfg, kl, upd)                # subtract extracted
-            new_mom.append(mom); new_err.append(er)
-            upds.append(upd.reshape(p.shape))
-        state["sk_mom"] = jax.tree_util.tree_unflatten(treedef, new_mom)
-        state["sk_err"] = jax.tree_util.tree_unflatten(treedef, new_err)
-        update = jax.tree_util.tree_unflatten(treedef, upds)
+        #
+        # The packed engine (DESIGN.md §4) sketches all clients x all leaves
+        # in one fused pass; per-leaf key derivation (fold_in on the leaf
+        # index) is identical to the old per-leaf loop, so with
+        # cs_hash="independent" trajectories match the pre-packed code
+        # exactly (the default "balanced" family is a different -- equally
+        # valid -- count-sketch operator).  Momentum/error accumulate in
+        # the (b_total,) payload.
+        plan = make_packing_plan(cfg.sketch, params)
+        rp = derive_round_params(plan, key)
+        # clients sketch; server averages sketches (mergeable)
+        sks = sk_packed_clients(plan, rp, deltas)           # (G, b_total)
+        s_mean = jnp.mean(sks.astype(jnp.float32), axis=0)
+        mom = cfg.fetchsgd_momentum * state["sk_mom"] + s_mean
+        er = state["sk_err"] + mom
+        dense = desk_flat(plan, rp, er)                     # unsketch error acc
+        # top-k selection on a desketch picks upward-biased coordinates;
+        # shrink by ~b/n so the applied mass matches the true signal
+        # (without this the EF loop is a positive feedback on dense,
+        # non-heavy-hitter gradients -- see EXPERIMENTS.md §Baselines)
+        upd_parts = []
+        for op in plan.ops:
+            dvec = dense[op.in_off:op.in_off + op.n]
+            k = max(1, int(op.n * cfg.topk_ratio))
+            shrink = cfg.fetchsgd_shrink or min(1.0, op.b / op.n)
+            upd_parts.append(topk_mask(dvec, k) * shrink)   # heavy hitters
+        upd_flat = jnp.concatenate(upd_parts)
+        er = er - sk_flat(plan, rp, upd_flat).astype(jnp.float32)
+        state["sk_mom"] = mom
+        state["sk_err"] = er
+        update = unpack_tree(plan, upd_flat, cast=False)
         params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
 
     elif cfg.name == "onebit_adam":

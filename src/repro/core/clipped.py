@@ -20,8 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.adaptive import apply_update
+from repro.core.packed import (derive_round_params, desk_packed,
+                               make_packing_plan, sk_packed_clients)
 from repro.core.safl import SAFLConfig, client_delta
-from repro.core.sketch import desketch_tree, sketch_tree
 
 Pytree = Any
 LossFn = Callable[[Pytree, Any], jax.Array]
@@ -61,9 +62,10 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
         return clip_delta(cfg, delta), l
 
     deltas, losses = jax.vmap(one_client)(batch)
-    sketches = jax.vmap(
-        lambda d: sketch_tree(base.sketch, round_key, d))(deltas)
-    mbar = jax.tree.map(lambda s: jnp.mean(s, axis=0), sketches)
-    update = desketch_tree(base.sketch, round_key, mbar, params)
+    plan = make_packing_plan(base.sketch, params)
+    rp = derive_round_params(plan, round_key)
+    sketches = sk_packed_clients(plan, rp, deltas)
+    mbar = jnp.mean(sketches, axis=0)
+    update = desk_packed(plan, rp, mbar)
     params, opt_state = apply_update(base.server, opt_state, params, update)
     return params, opt_state, {"loss": jnp.mean(losses)}

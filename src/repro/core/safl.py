@@ -15,8 +15,9 @@ One SAFL round (faithful to Alg. 1):
 Mesh mapping (DESIGN.md §3): a "client" is one data-parallel group of the
 ``(pod, data, model)`` mesh.  The client axis G is carried explicitly in the
 batch (leading axis, sharded over (pod, data)); the sketch average over G is
-a plain ``mean`` that GSPMD lowers to an all-reduce of **b floats per tensor**
--- the compressed uplink the paper buys.  Baselines that transmit raw deltas
+a plain ``mean`` over one packed **(G, b_total)** payload that GSPMD lowers
+to a single all-reduce of **b_total floats** -- the compressed uplink the
+paper buys, in one collective instead of one per tensor.  Baselines that transmit raw deltas
 (FedAvg / FedOpt) all-reduce O(d) instead; the roofline collective term shows
 the gap directly.
 
@@ -33,7 +34,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
-from repro.core.sketch import SketchConfig, desketch_tree, sketch_tree
+from repro.core.packed import (derive_round_params, desk_packed,
+                               make_packing_plan, sk_packed_clients)
+from repro.core.sketch import SketchConfig
 
 Pytree = Any
 LossFn = Callable[[Pytree, Any], jax.Array]  # (params, batch) -> scalar loss
@@ -93,18 +96,21 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
         lambda mb: client_delta(cfg, loss_fn, params, mb, eta))(batch)
 
     # --- uplink: sketch each client's delta with the SHARED round operator
-    # (Remark 3.1: same seed across clients within a round) ---
-    sketches = jax.vmap(
-        lambda d: sketch_tree(cfg.sketch, round_key, d))(deltas)
+    # (Remark 3.1: same seed across clients within a round).  The packed
+    # engine derives the operator ONCE for sk and desk and compresses the
+    # whole tree in one fused pass -> (G, b_total) payload. ---
+    plan = make_packing_plan(cfg.sketch, params)
+    rp = derive_round_params(plan, round_key)
+    sketches = sk_packed_clients(plan, rp, deltas)
 
     # --- server: average of sketches == sketch of average (Property 1).
     # Under GSPMD this mean over the client axis is the ONLY cross-client
-    # collective, and it moves b floats per tensor, not d. ---
-    mbar = jax.tree.map(lambda s: jnp.mean(s, axis=0), sketches)
+    # collective, and it moves b_total floats, not d. ---
+    mbar = jnp.mean(sketches, axis=0)
 
     # --- desk back to R^d and run ADA_OPT (Alg. 2); deterministic, so every
     # replica/client replays the identical server step. ---
-    update = desketch_tree(cfg.sketch, round_key, mbar, params)
+    update = desk_packed(plan, rp, mbar)
     params, opt_state = apply_update(cfg.server, opt_state, params, update,
                                      lr_scale=lr_scale)
 

@@ -25,6 +25,12 @@ experiments on small models.
 Seeds: one PRNG key per round, shared by all clients (paper Remark 3.1);
 per-tensor keys are derived with ``jax.random.fold_in`` on the leaf index,
 so the same round key on every device/client reproduces the same operator.
+
+This module is the per-leaf REFERENCE implementation: ``sketch_tree`` /
+``desketch_tree`` loop over leaves and re-derive the operator on each side
+of the round trip.  The hot path is the packed engine in
+``repro.core.packed`` (one fused dispatch per round, operator derived once
+and shared by sk/desk); tests/test_packed.py pins the two to exact parity.
 """
 
 from __future__ import annotations
@@ -53,6 +59,15 @@ class SketchConfig:
     transport_dtype: Any = jnp.float32  # dtype of the transmitted sketch
     use_pallas: bool = False   # route hot loops through Pallas kernels
     gaussian_chunk: int = 8192  # column chunk for on-the-fly Gaussian R
+    # Count-sketch hash family (DESIGN.md §4):
+    #   "balanced"    -- block-sparse JL: pad to (m, b) rows, random per-row
+    #                    rotation, sum rows.  Collision prob is 0 within a
+    #                    row and exactly 1/b across rows, so Lemma A.3's
+    #                    variance bound carries; sk/desk are pure
+    #                    gather/reshape/sum (no scatter) -- the fast family.
+    #   "independent" -- classic per-element uniform hash + segment-sum
+    #                    (the seed reference implementation).
+    cs_hash: str = "balanced"
 
     def __post_init__(self):
         if self.kind not in ("none", "gaussian", "srht", "countsketch"):
@@ -61,6 +76,8 @@ class SketchConfig:
             raise ValueError(f"unknown sketch mode: {self.mode}")
         if not (self.kind == "none" or 0.0 < self.ratio <= 1.0):
             raise ValueError("ratio must be in (0, 1]")
+        if self.cs_hash not in ("balanced", "independent"):
+            raise ValueError(f"unknown cs_hash family: {self.cs_hash}")
 
 
 def leaf_sketch_size(n: int, cfg: SketchConfig) -> int:
@@ -203,7 +220,49 @@ def _cs_hashes(key: jax.Array, n: int, b: int):
     return h, s
 
 
+def _balanced_cs_params(key: jax.Array, n: int, b: int):
+    """Balanced (block-sparse JL) count-sketch: m = ceil(n/b) rows of b
+    columns; row k is rotated by a uniform r_k, so element i = (k, c) hashes
+    to slot (c + r_k) mod b.  Within a row no two elements collide; across
+    rows any pair collides with probability exactly 1/b."""
+    m = -(-n // b)
+    rkey, skey = jax.random.split(key)
+    r = jax.random.randint(rkey, (m,), 0, b)
+    s = jax.random.rademacher(skey, (n,), dtype=jnp.float32)
+    return r, s
+
+
+def _balanced_sk_core(v: jax.Array, r: jax.Array, s: jax.Array, b: int) -> jax.Array:
+    """sk given derived (r, s): out[j] = sum_k x[k, (j - r_k) mod b] --
+    scatter-free gather + row-sum.  Shared by the per-leaf reference and the
+    packed engine (single source of truth for the index math)."""
+    n = v.shape[0]
+    m = r.shape[0]
+    x = jnp.pad(v * s.astype(v.dtype), (0, m * b - n)).reshape(m, b)
+    idx = (jnp.arange(b)[None, :] - r[:, None]) % b
+    return jnp.take_along_axis(x, idx, axis=1).sum(axis=0)
+
+
+def _balanced_desk_core(u: jax.Array, r: jax.Array, s: jax.Array, n: int) -> jax.Array:
+    """desk given derived (r, s): element (k, c) reads slot (c + r_k) mod b."""
+    b = u.shape[0]
+    idx = (jnp.arange(b)[None, :] + r[:, None]) % b
+    return u[idx].reshape(-1)[:n] * s.astype(u.dtype)
+
+
+def _balanced_cs_sk(cfg: SketchConfig, key: jax.Array, v: jax.Array, b: int) -> jax.Array:
+    r, s = _balanced_cs_params(key, v.shape[0], b)
+    return _balanced_sk_core(v, r, s, b)
+
+
+def _balanced_cs_desk(cfg: SketchConfig, key: jax.Array, u: jax.Array, n: int) -> jax.Array:
+    r, s = _balanced_cs_params(key, n, u.shape[0])
+    return _balanced_desk_core(u, r, s, n)
+
+
 def _countsketch_sk(cfg: SketchConfig, key: jax.Array, v: jax.Array, b: int) -> jax.Array:
+    if cfg.cs_hash == "balanced":
+        return _balanced_cs_sk(cfg, key, v, b)
     n = v.shape[0]
     h, s = _cs_hashes(key, n, b)
     if cfg.use_pallas:
@@ -213,6 +272,8 @@ def _countsketch_sk(cfg: SketchConfig, key: jax.Array, v: jax.Array, b: int) -> 
 
 
 def _countsketch_desk(cfg: SketchConfig, key: jax.Array, u: jax.Array, n: int) -> jax.Array:
+    if cfg.cs_hash == "balanced":
+        return _balanced_cs_desk(cfg, key, u, n)
     b = u.shape[0]
     h, s = _cs_hashes(key, n, b)
     return u[h] * s.astype(u.dtype)
@@ -251,9 +312,14 @@ def tree_sketch_sizes(cfg: SketchConfig, tree: Pytree) -> list[int]:
 
 
 def total_sketch_bits(cfg: SketchConfig, tree: Pytree) -> int:
-    """Uplink payload in bits per round (the paper's per-round cost O(b))."""
+    """Uplink payload in bits per round (the paper's per-round cost O(b)).
+
+    Routed through the packing plan so the count is exactly the transmitted
+    ``(b_total,)`` payload (matches the per-leaf sum in per_tensor mode and
+    the single concatenated sketch in concat mode)."""
+    from repro.core.packed import make_packing_plan
     itemsize = jnp.dtype(cfg.transport_dtype).itemsize
-    return sum(tree_sketch_sizes(cfg, tree)) * itemsize * 8
+    return make_packing_plan(cfg, tree).b_total * itemsize * 8
 
 
 def sketch_tree(cfg: SketchConfig, key: jax.Array, tree: Pytree) -> Pytree:

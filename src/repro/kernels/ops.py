@@ -12,8 +12,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.countsketch import countsketch_pallas
-from repro.kernels.fwht import fwht_pallas
+from repro.kernels.countsketch import (countsketch_clients_pallas,
+                                       countsketch_pallas)
+from repro.kernels.fwht import MAX_C, fwht_pallas, fwht_rows_pallas
 from repro.kernels.gaussian_sketch import gaussian_desk_pallas, gaussian_sk_pallas
 
 
@@ -23,14 +24,40 @@ def _interpret() -> bool:
 
 @partial(jax.jit, static_argnames=("b",))
 def countsketch(x: jax.Array, h: jax.Array, b: int) -> jax.Array:
-    """Count-sketch aggregation: out[j] = sum_{h[i]==j} x[i]."""
+    """Count-sketch aggregation: out[j] = sum_{h[i]==j} x[i].
+
+    Any ``b`` is supported: the kernel splits the output into VMEM-sized
+    b-blocks on a dedicated grid axis (see kernels/countsketch.py).
+    """
     return countsketch_pallas(x, h, b, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("b",))
+def countsketch_clients(x: jax.Array, h: jax.Array, b: int) -> jax.Array:
+    """Batched count-sketch over the client axis: x (G, n) -> (G, b).
+
+    One Pallas launch for all G clients; the per-tile one-hot is built once
+    and shared by every client row (packed engine hot path, DESIGN.md §4).
+    """
+    return countsketch_clients_pallas(x, h, b, interpret=_interpret())
 
 
 @jax.jit
 def fwht(v: jax.Array) -> jax.Array:
     """Unnormalized fast Walsh-Hadamard transform of a pow2-length vector."""
     return fwht_pallas(v, interpret=_interpret())
+
+
+@jax.jit
+def fwht_rows(x: jax.Array) -> jax.Array:
+    """Unnormalized FWHT along the last axis of an (R, C) batch.
+
+    Rows up to MAX_C transform in one grid sweep; longer rows fall back to
+    the per-row two-level Kronecker path of ``fwht_pallas``.
+    """
+    if x.shape[-1] <= MAX_C:
+        return fwht_rows_pallas(x, interpret=_interpret())
+    return jnp.stack([fwht_pallas(row, interpret=_interpret()) for row in x])
 
 
 @partial(jax.jit, static_argnames=("b",))

@@ -10,20 +10,26 @@ import jax
 from jax.sharding import Mesh
 
 
+def _mesh(shape, axes) -> Mesh:
+    # jax.sharding.AxisType landed after 0.4.x; Auto is the default there
+    # anyway, so on older jax we simply omit the kwarg.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """Single-device mesh for CPU tests/examples (1x1)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mesh((1, 1), ("data", "model"))
 
 
 def data_axis_size(mesh: Mesh) -> int:

@@ -27,10 +27,29 @@ from repro.models.config import ModelConfig
 from repro.models.model import decode_step, forward, loss_fn, param_shapes
 from repro.models.sharding import param_pspecs
 
-try:  # jax>=0.6 moved shard_map to the top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+try:  # jax>=0.6 moved shard_map to the top level (axis_names/check_vma API)
+    _shard_map_impl = jax.shard_map
+    _NEW_SHARD_MAP = True
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl  # type: ignore
+    _NEW_SHARD_MAP = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """Version shim: call sites use the new-jax kwargs; on jax 0.4.x we
+    translate axis_names (manual axes) to the old ``auto`` complement and
+    check_vma to check_rep."""
+    if _NEW_SHARD_MAP:
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, **kw)
+    kw = {"check_rep": check_vma}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map_impl(f, mesh, in_specs, out_specs, **kw)
 
 Pytree = Any
 

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.countsketch import countsketch_pallas
+from repro.kernels.countsketch import (countsketch_clients_pallas,
+                                       countsketch_pallas)
 from repro.kernels.fwht import fwht_pallas, fwht_rows_pallas
 from repro.kernels.gaussian_sketch import (gaussian_desk_pallas,
                                            gaussian_sk_pallas)
@@ -34,6 +35,41 @@ def test_countsketch_dtypes(dtype):
     np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4)
 
 
+@pytest.mark.parametrize("b", [2049, 4096])
+def test_countsketch_large_b_split_by_grid(b):
+    """b beyond one VMEM block is split on the b-block grid axis (the old
+    wrapper claimed-but-didn't; now the kernel handles any b)."""
+    rng = np.random.RandomState(b)
+    x = rng.randn(3000).astype(np.float32)
+    h = rng.randint(0, b, 3000).astype(np.int32)
+    got = ops.countsketch(jnp.array(x), jnp.array(h), b)
+    want = ref.countsketch_ref(jnp.array(x), jnp.array(h), b)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("g,n,b", [(1, 100, 16), (5, 2000, 64),
+                                   (9, 1500, 3000)])
+def test_countsketch_clients_batched(g, n, b):
+    """One launch for all G client rows == per-row reference."""
+    rng = np.random.RandomState(g + n)
+    x = rng.randn(g, n).astype(np.float32)
+    h = rng.randint(0, b, n).astype(np.int32)
+    got = countsketch_clients_pallas(jnp.array(x), jnp.array(h), b)
+    want = np.stack([np.array(ref.countsketch_ref(jnp.array(x[i]),
+                                                  jnp.array(h), b))
+                     for i in range(g)])
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_countsketch_clients_jit_wrapper():
+    x = jnp.ones((3, 100))
+    h = jnp.zeros((100,), jnp.int32)
+    out = ops.countsketch_clients(x, h, 4)
+    assert out.shape == (3, 4)
+    np.testing.assert_allclose(np.array(out[:, 0]), 100.0)
+
+
 @pytest.mark.parametrize("shape", [(1, 8), (3, 64), (20, 512), (9, 4096)])
 def test_fwht_rows(shape):
     x = np.random.RandomState(1).randn(*shape).astype(np.float32)
@@ -46,6 +82,14 @@ def test_fwht_rows(shape):
 def test_fwht_1d_including_kronecker_path(n):
     x = np.random.RandomState(2).randn(n).astype(np.float32)
     got = fwht_pallas(jnp.array(x))
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-3, atol=0.2)
+
+
+def test_fwht_rows_wrapper_long_rows():
+    """ops.fwht_rows falls back to the per-row Kronecker path for C > MAX_C."""
+    x = np.random.RandomState(4).randn(2, 8192).astype(np.float32)
+    got = ops.fwht_rows(jnp.array(x))
     want = ref.fwht_ref(x)
     np.testing.assert_allclose(np.array(got), want, rtol=1e-3, atol=0.2)
 

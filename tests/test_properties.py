@@ -3,6 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dep (pip install -e .[test]); suite must still collect")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -99,8 +99,8 @@ MINI_DRYRUN = textwrap.dedent("""
     from repro.models.sharding import param_pspecs, use_mesh
     from repro.models.model import cache_shapes
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _mesh
+    mesh = _mesh((2, 4), ("data", "model"))
     cfg = get_config("llama3_2_1b", smoke=True)
     safl = SAFLConfig(sketch=SketchConfig(kind="countsketch", ratio=0.01),
                       server=AdaConfig(name="amsgrad", lr=1e-3),
@@ -136,15 +136,23 @@ MINI_DRYRUN = textwrap.dedent("""
 """)
 
 
+@pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-manual shard_map needs the jax>=0.6 stack; the XLA "
+           "bundled with jax 0.4.x hard-crashes (IsManualSubgroup CHECK) "
+           "on sharding hints inside a partial-manual region")
 def test_mini_dryrun_8_devices():
     """Distributed SAFL train + serve lower AND compile on an 8-device host
     mesh (subprocess so the device-count flag never leaks into this test
     session)."""
+    import os
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    if "JAX_PLATFORMS" in os.environ:  # keep the CPU pin; without it the
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]  # subprocess may
+        # spend minutes probing an absent TPU backend before falling back
     r = subprocess.run([sys.executable, "-c", MINI_DRYRUN],
                        capture_output=True, text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
-                       cwd="/root/repo")
+                       env=env, cwd="/root/repo")
     assert "MINI_DRYRUN_OK" in r.stdout, r.stderr[-3000:]
 
 
