@@ -15,9 +15,11 @@ import jax.numpy as jnp
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.core.adaptive import AdaConfig
+from repro.core.packed import make_packing_plan
 from repro.core.safl import SAFLConfig, fedopt_round, init_safl, safl_round
 from repro.core.sketch import SketchConfig
 from repro.data import BigramLMData, LMDataConfig
+from repro.launch.driver import run_scan
 from repro.models import ModelConfig, init_params, loss_fn
 from repro.optim import cosine
 
@@ -50,20 +52,33 @@ data = BigramLMData(LMDataConfig(vocab_size=model.vocab_size, seq_len=64,
 params = init_params(model, jax.random.key(0))
 opt = init_safl(safl, params)
 loss = lambda p, b: loss_fn(model, p, b)
-round_fn = fedopt_round if args.fedopt else safl_round
-step = jax.jit(functools.partial(round_fn, safl, loss))
+sampler = data.device_sampler(batch_per_client=8, local_steps=2)
 sched = cosine(args.rounds, warmup=10)
+
+# PackingPlan built once outside the trace; the fused multi-round driver
+# (launch/driver.py) scans whole chunks on device with donated carries and
+# checkpoints at chunk boundaries.  The cosine server LR rides in through
+# kwargs_fn as a function of the scanned round index.
+if args.fedopt:
+    round_fn = functools.partial(fedopt_round, safl, loss)
+else:
+    plan = make_packing_plan(safl.sketch, params)
+    round_fn = functools.partial(safl_round, safl, loss, plan=plan)
 
 n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
 print(f"{'FedOPT' if args.fedopt else 'SAFL'} on {n/1e6:.1f}M params, "
       f"sketch ratio {args.ratio}")
-for t in range(args.rounds):
-    batch = data.round_batch(batch_per_client=8, local_steps=2, seed=t)
-    params, opt, m = step(params, opt, batch, jax.random.key(t),
-                          lr_scale=sched(jnp.asarray(t)))
-    if t % 20 == 0 or t == args.rounds - 1:
-        print(f"round {t:4d}  loss {float(m['loss']):.4f}")
-    if t and t % 100 == 0:
-        save_checkpoint(args.ckpt, {"params": params, "opt": opt}, step=t)
+
+
+def on_chunk(t_done, p, o, hist):
+    print(f"round {t_done - 1:4d}  loss {hist['loss'][-1]:.4f}")
+    if t_done < args.rounds:
+        save_checkpoint(args.ckpt, {"params": p, "opt": o}, step=t_done)
+
+
+params, opt, hist = run_scan(
+    round_fn, sampler, params, opt, rounds=args.rounds, key=jax.random.key(0),
+    chunk_size=100, kwargs_fn=lambda t: {"lr_scale": sched(t)},
+    on_chunk=on_chunk)
 save_checkpoint(args.ckpt, {"params": params, "opt": opt}, step=args.rounds)
 print("checkpoint saved to", args.ckpt + ".npz")

@@ -52,6 +52,7 @@ class BaselineConfig:
     client_lr: float = 0.1
     local_steps: int = 1
     server: AdaConfig = AdaConfig(name="sgd", lr=1.0)
+    remat_local: bool = True        # jax.checkpoint around local grads
     # compression knobs
     topk_ratio: float = 0.01        # fraction of coords kept (topk/randk)
     sketch: SketchConfig = SketchConfig(kind="countsketch", ratio=0.01)
@@ -61,15 +62,44 @@ class BaselineConfig:
     marina_p: float = 0.1           # prob of full-gradient sync round
     seed_tag: int = 0
 
+    def _safl(self) -> SAFLConfig:
+        return SAFLConfig(client_lr=self.client_lr,
+                          local_steps=self.local_steps,
+                          remat_local=self.remat_local)
+
 
 # --------------------------------------------------------------------------
 # compressors (per flat vector)
 # --------------------------------------------------------------------------
 
+def kth_largest_abs(v: jax.Array, k: int) -> jax.Array:
+    """Exact k-th largest of |v| WITHOUT a sort.
+
+    ``lax.top_k`` lowers to a full variadic sort on XLA:CPU (~60ms for 90k
+    floats), which made top-k the dominant cost of the topk_ef/fetchsgd
+    rounds.  Non-negative f32 values order exactly like their int32 bit
+    patterns, so a 32-step binary search on the bit value -- each step one
+    O(n) count -- finds the identical threshold ``top_k(|v|, k)[0][-1]``.
+    """
+    xi = jax.lax.bitcast_convert_type(jnp.abs(v).astype(jnp.float32),
+                                      jnp.int32)
+    k = jnp.asarray(k, jnp.int32)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = lo + (hi - lo + 1) // 2
+        ok = jnp.sum(xi >= mid) >= k           # pred monotone in mid
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
+
+    lo, _ = jax.lax.fori_loop(0, 32, body, (jnp.min(xi), jnp.max(xi)))
+    return jax.lax.bitcast_convert_type(lo, jnp.float32)
+
+
 def topk_mask(v: jax.Array, k: int) -> jax.Array:
-    """Dense mask keeping the k largest-|.| entries (biased, contractive)."""
+    """Dense mask keeping the k largest-|.| entries (biased, contractive).
+    Threshold via ``kth_largest_abs`` (sort-free; identical selection)."""
     k = max(1, min(k, v.shape[0]))
-    thresh = jax.lax.top_k(jnp.abs(v), k)[0][-1]
+    thresh = kth_largest_abs(v, k)
     return jnp.where(jnp.abs(v) >= thresh, v, 0.0)
 
 
@@ -80,6 +110,17 @@ def randk_unbiased(key: jax.Array, v: jax.Array, k: int) -> jax.Array:
     idx = jax.random.choice(key, n, (k,), replace=False)
     mask = jnp.zeros((n,), v.dtype).at[idx].set(1.0)
     return v * mask * (n / k)
+
+
+def randp_unbiased(key: jax.Array, v: jax.Array, p: float) -> jax.Array:
+    """Unbiased Bernoulli Rand-p: keep each coord w.p. ``p``, scale by 1/p.
+
+    Same compression omega as exact Rand-K at p = k/n (1/p - 1 = n/k - 1),
+    but O(n) -- ``jax.random.choice(replace=False)`` materializes a full
+    random permutation (an O(n log n) sort on CPU) per call, which dominated
+    the marina round."""
+    mask = jax.random.bernoulli(key, p, v.shape)
+    return jnp.where(mask, v / p, 0.0)
 
 
 def sign_quant(v: jax.Array) -> jax.Array:
@@ -98,7 +139,8 @@ def _per_leaf(fn, tree):
 # state
 # --------------------------------------------------------------------------
 
-def init_baseline_state(cfg: BaselineConfig, params: Pytree, num_clients: int) -> dict:
+def init_baseline_state(cfg: BaselineConfig, params: Pytree, num_clients: int,
+                        plan=None) -> dict:
     f32 = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
     state = {"opt": init_opt_state(cfg.server, params),
              "round": jnp.zeros((), jnp.int32)}
@@ -108,19 +150,23 @@ def init_baseline_state(cfg: BaselineConfig, params: Pytree, num_clients: int) -
             lambda p: jnp.zeros((num_clients,) + p.shape, jnp.float32), params)
     if cfg.name == "fetchsgd":
         # sketch-space accumulators live in the packed (b_total,) payload
-        plan = make_packing_plan(cfg.sketch, params)
+        if plan is None:
+            plan = make_packing_plan(cfg.sketch, params)
         state["sk_mom"] = jnp.zeros((plan.b_total,), jnp.float32)
         state["sk_err"] = jnp.zeros((plan.b_total,), jnp.float32)
     if cfg.name == "marina":
         state["g"] = f32(params)
-        state["prev_params"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        # explicit copy: ``astype`` is a no-op for f32 params, and aliasing
+        # prev_params to params breaks donation (same buffer donated twice)
+        state["prev_params"] = jax.tree.map(
+            lambda p: jnp.array(p, jnp.float32, copy=True), params)
     if cfg.name == "onebit_adam":
         state["v_frozen"] = f32(params)
     return state
 
 
 def _deltas_and_losses(cfg: BaselineConfig, loss_fn, params, batch, eta):
-    scfg = SAFLConfig(client_lr=cfg.client_lr, local_steps=cfg.local_steps)
+    scfg = cfg._safl()
     return jax.vmap(lambda mb: client_delta(scfg, loss_fn, params, mb, eta))(batch)
 
 
@@ -129,45 +175,73 @@ def _deltas_and_losses(cfg: BaselineConfig, loss_fn, params, batch, eta):
 # --------------------------------------------------------------------------
 
 def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
-                   state: dict, batch: Pytree, key: jax.Array
-                   ) -> tuple[Pytree, dict, dict]:
+                   state: dict, batch: Pytree, key: jax.Array, *,
+                   plan=None) -> tuple[Pytree, dict, dict]:
+    """One baseline round.  PURELY FUNCTIONAL: the input ``state`` dict is
+    never mutated -- a fresh dict is returned each round, which is what makes
+    this a safe ``lax.scan`` carry and a safe donation target in the
+    multi-round driver (an aliased in-place update would read freed buffers).
+
+    ``plan`` (optional) is the static packing layout, built once by
+    multi-round callers as in ``safl_round``.
+    """
     eta = jnp.asarray(cfg.client_lr, jnp.float32)
     rnd = state["round"]
-    deltas, losses = _deltas_and_losses(cfg, loss_fn, params, batch, eta)
+    prev_deltas = None
+    if cfg.name == "marina":
+        # MARINA evaluates grads at BOTH x_t and x_{t-1} on the same
+        # minibatch.  Fuse the two evaluations into one vmapped pass over
+        # stacked parameters: same math, half the op-dispatch overhead of
+        # two sequential client_delta sweeps.
+        scfg = cfg._safl()
+        stacked = jax.tree.map(lambda a, b: jnp.stack([a, b.astype(a.dtype)]),
+                               params, state["prev_params"])
+        d2, l2 = jax.vmap(lambda p: jax.vmap(
+            lambda mb: client_delta(scfg, loss_fn, p, mb, eta))(batch)
+        )(stacked)
+        deltas = jax.tree.map(lambda x: x[0], d2)
+        prev_deltas = jax.tree.map(lambda x: x[1], d2)
+        losses = l2[0]
+    else:
+        deltas, losses = _deltas_and_losses(cfg, loss_fn, params, batch, eta)
     metrics = {"loss": jnp.mean(losses)}
     G = jax.tree.leaves(deltas)[0].shape[0]
 
     if cfg.name == "fedavg" or cfg.name == "fedopt":
         update = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
+        params, opt = apply_update(cfg.server, state["opt"], params, update)
+        state = {**state, "opt": opt}
 
     elif cfg.name in ("topk_ef", "cocktail", "cdadam"):
         # packed layout (DESIGN.md §4): error memory + delta flattened into
         # one (G, d_total) buffer; the compressor runs ONCE on the packed
         # vector (global top-k / rand-k, the canonical formulation) instead
         # of a per-leaf loop.
-        plan = make_packing_plan(cfg.sketch, params)
+        if plan is None:
+            plan = make_packing_plan(cfg.sketch, params)
         a2 = jax.vmap(lambda t: pack_tree(plan, t))(
             jax.tree.map(lambda e, d: e + d, state["err"], deltas))
         k = max(1, int(plan.d_total * cfg.topk_ratio))
         if cfg.name == "cocktail":
             def comp_one(g, v):
                 kk = jax.random.fold_in(key, g)
-                # biased Rand-K (no n/k inflation -- EF absorbs the bias)
-                n = v.shape[0]
-                idx = jax.random.choice(kk, n, (k,), replace=False)
-                mask = jnp.zeros((n,), v.dtype).at[idx].set(1.0)
-                sparse = v * mask
-                # sign-quantize the survivors (scale = mean |.| over k)
-                scale = jnp.sum(jnp.abs(sparse)) / k
+                # biased Bernoulli Rand-p, p = k/n (expected-k; EF absorbs
+                # the bias either way).  Exact Rand-K needed a full random
+                # permutation -- an O(n log n) sort that dominated the round
+                # on CPU; the Bernoulli draw is one O(n) PRNG pass.
+                mask = jax.random.bernoulli(kk, k / v.shape[0], v.shape)
+                sparse = jnp.where(mask, v, 0.0)
+                # sign-quantize the survivors (scale = mean |.| over kept)
+                kept = jnp.maximum(jnp.sum(mask), 1)
+                scale = jnp.sum(jnp.abs(sparse)) / kept
                 return jnp.sign(sparse) * scale
             comp = jax.vmap(comp_one)(jnp.arange(G), a2)
         else:
             comp = jax.vmap(lambda v: topk_mask(v, k))(a2)
-        state["err"] = jax.vmap(
-            lambda f: unpack_tree(plan, f, cast=False))(a2 - comp)
+        err = jax.vmap(lambda f: unpack_tree(plan, f, cast=False))(a2 - comp)
         update = unpack_tree(plan, jnp.mean(comp, axis=0), cast=False)
-        params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
+        params, opt = apply_update(cfg.server, state["opt"], params, update)
+        state = {**state, "err": err, "opt": opt}
 
     elif cfg.name == "fetchsgd":
         # NOTE: canonical FetchSGD keeps ONE fixed sketch so momentum/error
@@ -186,7 +260,8 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
         # exactly (the default "balanced" family is a different -- equally
         # valid -- count-sketch operator).  Momentum/error accumulate in
         # the (b_total,) payload.
-        plan = make_packing_plan(cfg.sketch, params)
+        if plan is None:
+            plan = make_packing_plan(cfg.sketch, params)
         rp = derive_round_params(plan, key)
         # clients sketch; server averages sketches (mergeable)
         sks = sk_packed_clients(plan, rp, deltas)           # (G, b_total)
@@ -206,10 +281,9 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
             upd_parts.append(topk_mask(dvec, k) * shrink)   # heavy hitters
         upd_flat = jnp.concatenate(upd_parts)
         er = er - sk_flat(plan, rp, upd_flat).astype(jnp.float32)
-        state["sk_mom"] = mom
-        state["sk_err"] = er
         update = unpack_tree(plan, upd_flat, cast=False)
-        params, state["opt"] = apply_update(cfg.server, state["opt"], params, update)
+        params, opt = apply_update(cfg.server, state["opt"], params, update)
+        state = {**state, "sk_mom": mom, "sk_err": er, "opt": opt}
 
     elif cfg.name == "onebit_adam":
         mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
@@ -248,44 +322,38 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
                                      (params, state))
 
     elif cfg.name == "marina":
-        # gradient-difference compression; clients evaluate grads at x_t and
-        # x_{t-1} on the same minibatch (K=1 semantics: delta/eta = grad)
+        # gradient-difference compression (grads at x_t / x_{t-1} computed
+        # by the fused two-point pass above; K=1 semantics: delta/eta = grad)
         grads = jax.tree.map(lambda d: d / eta, deltas)     # (G, shape)
-        scfg = SAFLConfig(client_lr=cfg.client_lr, local_steps=cfg.local_steps)
-        prev_p = state["prev_params"]
-        prev_deltas, _ = jax.vmap(
-            lambda mb: client_delta(scfg, loss_fn, prev_p, mb, eta))(batch)
         prev_grads = jax.tree.map(lambda d: d / eta, prev_deltas)
         full_round = jax.random.bernoulli(key, cfg.marina_p)
+        if plan is None:
+            plan = make_packing_plan(cfg.sketch, params)
 
         def full_fn(_):
             return jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
 
         def diff_fn(_):
-            def comp_leaf(i, diff_flat):  # (G, n)
-                k = max(1, int(diff_flat.shape[1] * cfg.topk_ratio))
-                return jax.vmap(lambda g, v: randk_unbiased(
-                    jax.random.fold_in(jax.random.fold_in(key, i), g), v, k))(
-                        jnp.arange(G), diff_flat)
+            # packed layout: one (G, d_total) buffer, one Bernoulli Rand-p
+            # pass per client (unbiased, omega = 1/p - 1 = n/k - 1) instead
+            # of a per-leaf loop of permutation-based Rand-K draws
             diffs = jax.tree.map(lambda g, pg: g - pg, grads, prev_grads)
-            leaves, treedef = jax.tree_util.tree_flatten(diffs)
-            out = []
-            for i, l in enumerate(leaves):
-                c = comp_leaf(i, l.reshape(l.shape[0], -1)).reshape(l.shape)
-                out.append(jnp.mean(c, axis=0))
-            q = jax.tree_util.tree_unflatten(treedef, out)
+            flat = jax.vmap(lambda t: pack_tree(plan, t))(diffs)
+            comp = jax.vmap(lambda g, v: randp_unbiased(
+                jax.random.fold_in(key, g), v, cfg.topk_ratio))(
+                    jnp.arange(G), flat)
+            q = unpack_tree(plan, jnp.mean(comp, axis=0), cast=False)
             return jax.tree.map(lambda g0, qi: g0 + qi, state["g"], q)
 
         g_new = jax.lax.cond(full_round, full_fn, diff_fn, None)
-        state["g"] = g_new
-        state["prev_params"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
-        params, state["opt"] = apply_update(cfg.server, state["opt"], params, g_new)
+        prev = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        params, opt = apply_update(cfg.server, state["opt"], params, g_new)
+        state = {**state, "g": g_new, "prev_params": prev, "opt": opt}
 
     else:
         raise ValueError(f"unknown baseline {cfg.name}")
 
-    state["round"] = rnd + 1
-    return params, state, metrics
+    return params, {**state, "round": rnd + 1}, metrics
 
 
 def uplink_bits(cfg: BaselineConfig, params: Pytree) -> int:

@@ -50,10 +50,12 @@ def clip_delta(cfg: ClippedSAFLConfig, delta: Pytree) -> Pytree:
 
 def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
                        params: Pytree, opt_state: dict, batch: Pytree,
-                       round_key: jax.Array) -> tuple[Pytree, dict, dict]:
+                       round_key: jax.Array, *,
+                       plan=None) -> tuple[Pytree, dict, dict]:
     """One SAFL round with per-client delta clipping (heavy-tail defense).
 
-    batch leaves: (G, K, mb, ...) as in safl_round."""
+    batch leaves: (G, K, mb, ...) as in safl_round; ``plan`` as in
+    safl_round (built once by multi-round callers)."""
     base = cfg.base
     eta = jnp.asarray(base.client_lr, jnp.float32)
 
@@ -62,7 +64,8 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
         return clip_delta(cfg, delta), l
 
     deltas, losses = jax.vmap(one_client)(batch)
-    plan = make_packing_plan(base.sketch, params)
+    if plan is None:
+        plan = make_packing_plan(base.sketch, params)
     rp = derive_round_params(plan, round_key)
     sketches = sk_packed_clients(plan, rp, deltas)
     mbar = jnp.mean(sketches, axis=0)

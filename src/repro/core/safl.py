@@ -81,13 +81,16 @@ def client_delta(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
 def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                opt_state: dict, batch: Pytree, round_key: jax.Array,
                eta_scale: jax.Array | float = 1.0,
-               lr_scale: jax.Array | float = 1.0,
-               ) -> tuple[Pytree, dict, dict]:
+               lr_scale: jax.Array | float = 1.0, *,
+               plan=None) -> tuple[Pytree, dict, dict]:
     """One full SAFL round over all clients.
 
     ``batch`` leaves are shaped (G, K, mb, ...): G clients (sharded over the
     (pod, data) mesh axes in distributed mode), K local steps each.
-    Returns (params, opt_state, metrics).
+    ``plan`` is the static packing layout; multi-round callers (the scan
+    driver) build it ONCE outside the trace and thread it through via
+    ``functools.partial`` -- only the round operator (``derive_round_params``)
+    depends on ``round_key``.  Returns (params, opt_state, metrics).
     """
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
 
@@ -99,7 +102,8 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     # (Remark 3.1: same seed across clients within a round).  The packed
     # engine derives the operator ONCE for sk and desk and compresses the
     # whole tree in one fused pass -> (G, b_total) payload. ---
-    plan = make_packing_plan(cfg.sketch, params)
+    if plan is None:
+        plan = make_packing_plan(cfg.sketch, params)
     rp = derive_round_params(plan, round_key)
     sketches = sk_packed_clients(plan, rp, deltas)
 

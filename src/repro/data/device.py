@@ -1,0 +1,133 @@
+"""Device-resident federated data sampling.
+
+The host pipeline (``synthetic.BigramLMData.round_batch``) draws every round's
+batch with numpy -- a Python loop over sequence positions followed by a
+host->device transfer -- which serializes the training loop on the host even
+when the round itself is fully jitted.  This module ports the bigram
+transition-matrix sampling to pure jnp so a ``lax.scan`` over rounds
+(``launch/driver.py``) can draw its own batches on device.
+
+Determinism contract: the tokens of client ``c`` in round ``t`` are a pure
+function of ``(t, c, cfg.seed)`` -- the PRNG key is
+``fold_in(fold_in(key(seed), t), c)`` and the transition table is fixed at
+construction.  In particular the stream of one client does not depend on how
+many other clients exist (tests/test_driver.py pins this).
+
+The sampling rule matches the host implementation: token ``s`` is drawn from
+the cumulative transition row of token ``s-1`` by counting how many cumsum
+entries a uniform variate exceeds (inverse-CDF via comparison).  The PRNG
+differs (threefry vs numpy PCG), so device batches are *not* bit-equal to
+host batches -- they are the same Markov chain, sampled with a different
+stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceBigramSampler:
+    """Pure-jnp bigram LM batch sampler for the on-device round driver.
+
+    ``init_state`` returns the device-resident data state (the stacked
+    cumulative transition rows) that the driver threads through its scan
+    carry (and donates across chunks); ``sample(state, t)`` draws round
+    ``t``'s full federated batch shaped ``(G, K, mb, seq)``.
+    """
+    trans_cum: np.ndarray          # (G, V, V) per-client cumulative rows
+    batch_per_client: int
+    local_steps: int
+    seq_len: int
+    vocab_size: int
+    num_clients: int
+    seed: int
+
+    @classmethod
+    def from_data(cls, data, batch_per_client: int,
+                  local_steps: int) -> "DeviceBigramSampler":
+        """Build from a host ``BigramLMData`` (same transition matrices)."""
+        cfg = data.cfg
+        cum = np.cumsum(np.stack(data.trans), axis=2).astype(np.float32)
+        return cls(trans_cum=cum, batch_per_client=batch_per_client,
+                   local_steps=local_steps, seq_len=cfg.seq_len,
+                   vocab_size=cfg.vocab_size, num_clients=cfg.num_clients,
+                   seed=cfg.seed)
+
+    # -- driver protocol ----------------------------------------------------
+
+    def init_state(self) -> Pytree:
+        return {"trans_cum": jnp.asarray(self.trans_cum, jnp.float32)}
+
+    def sample(self, state: Pytree, t: jax.Array) -> tuple[Pytree, Pytree]:
+        """Draw round ``t``'s batch: leaves (G, K, mb, seq).  Traceable."""
+        cum = state["trans_cum"]
+        G, B, S = self.num_clients, self.batch_per_client, self.seq_len
+        V = self.vocab_size
+        round_key = jax.random.fold_in(jax.random.key(self.seed), t)
+
+        def client_tokens(cum_c, c):
+            key = jax.random.fold_in(round_key, c)
+            k_first, k_seq = jax.random.split(key)
+            first = jax.random.randint(k_first, (B,), 0, V, dtype=jnp.int32)
+
+            def step(prev, k):
+                u = jax.random.uniform(k, (B,))
+                nxt = jnp.sum(cum_c[prev] < u[:, None], axis=1)
+                # float cumsum can top out slightly below 1.0; clamp the
+                # (measure-zero) overflow instead of emitting token V
+                nxt = jnp.minimum(nxt, V - 1).astype(jnp.int32)
+                return nxt, nxt
+
+            _, rest = jax.lax.scan(step, first, jax.random.split(k_seq, S - 1))
+            return jnp.concatenate([first[:, None], rest.T], axis=1)  # (B, S)
+
+        toks = jax.vmap(client_tokens)(cum, jnp.arange(G))             # (G,B,S)
+        mb = B // self.local_steps
+        batch = {"tokens": toks.reshape(G, self.local_steps, mb, S)}
+        return state, batch
+
+    # -- convenience --------------------------------------------------------
+
+    def round_batch(self, t) -> Pytree:
+        """One round's batch, outside any scan (tests / host-loop parity)."""
+        return self.sample(self.init_state(), jnp.asarray(t, jnp.int32))[1]
+
+    def host_round_batch(self, t: int) -> Pytree:
+        """The same round's batch drawn the legacy way: a host Python loop
+        over clients and sequence positions (one eager PRNG op per step),
+        returning numpy.
+
+        Bitwise-identical tokens to ``sample`` (fold_in/split/randint/uniform
+        are deterministic per key, vmapped or not), so a host-driven trainer
+        fed by this pipeline follows EXACTLY the trajectory of the scanned
+        driver while paying the per-round host sampling cost the seed
+        pipeline paid -- which is what benchmarks/run.py's fig1/<algo>
+        (host-loop) rows measure against fig1/<algo>_scan."""
+        G, B, S = self.num_clients, self.batch_per_client, self.seq_len
+        V = self.vocab_size
+        round_key = jax.random.fold_in(jax.random.key(self.seed),
+                                       jnp.asarray(int(t), jnp.int32))
+        toks = np.empty((G, B, S), np.int32)
+        for c in range(G):
+            key = jax.random.fold_in(round_key, c)
+            k_first, k_seq = jax.random.split(key)
+            prev = np.asarray(jax.random.randint(k_first, (B,), 0, V,
+                                                 dtype=jnp.int32))
+            toks[c, :, 0] = prev
+            ks = jax.random.split(k_seq, S - 1)
+            cum_c = self.trans_cum[c]
+            for s in range(S - 1):
+                u = np.asarray(jax.random.uniform(ks[s], (B,)))
+                prev = np.minimum((cum_c[prev] < u[:, None]).sum(axis=1),
+                                  V - 1).astype(np.int32)
+                toks[c, :, s + 1] = prev
+        mb = B // self.local_steps
+        return {"tokens": toks.reshape(G, self.local_steps, mb, S)}

@@ -73,6 +73,13 @@ class BigramLMData:
         return {"tokens": toks.reshape(cfg.num_clients, local_steps, mb,
                                        cfg.seq_len)}
 
+    def device_sampler(self, batch_per_client: int, local_steps: int):
+        """Pure-jnp sampler over the same transition matrices, usable inside
+        a jitted multi-round scan (see repro.data.device)."""
+        from repro.data.device import DeviceBigramSampler
+        return DeviceBigramSampler.from_data(self, batch_per_client,
+                                             local_steps)
+
 
 @dataclasses.dataclass(frozen=True)
 class ClsDataConfig:

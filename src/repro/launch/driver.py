@@ -1,0 +1,148 @@
+"""On-device multi-round driver: R federated rounds per device dispatch.
+
+The seed trainers (``launch/train.py::train_loop``, ``benchmarks/run.py``)
+drove every round from the host: sample a batch with numpy, dispatch one
+jitted round, synchronously pull the loss back.  At bench scale that
+host<->device round trip -- not the compressed-communication math the paper
+analyzes -- dominates wall clock.  FetchSGD / FedSKETCH keep the whole
+sketch-train loop resident on the accelerator; this driver does the same
+(DESIGN.md §6):
+
+* ``run_scan`` runs a chunk of rounds as ONE ``jax.lax.scan``: the scan body
+  draws its own batch on device (``repro.data.device``), derives the round's
+  sketch operator from the scanned round key (Remark 3.1 semantics
+  unchanged -- same fold_in(key, t) chain as the host loop), and steps the
+  round function.
+* the ``(params, opt/baseline state, data state)`` carry is DONATED
+  (``donate_argnums``) so large models update in place across chunks.
+* metrics (loss, uplink bits) accumulate on device as stacked scan outputs
+  and are fetched once per chunk, not once per round.
+* the static sketch layout (``PackingPlan``) is built once OUTSIDE the trace
+  by the caller and threaded in via ``functools.partial(round_fn, plan=...)``.
+
+One interface serves ``safl_round``, ``clipped_safl_round`` and every
+``baseline_round`` variant: any ``round_fn(params, state, batch, key, **kw)
+-> (params, state, metrics)`` is scannable once it is purely functional
+(baselines were made so in this PR -- an in-place ``state`` mutation is an
+aliasing bug under donation).
+
+``run_host_loop`` is the one-dispatch-per-round reference with the SAME key
+and batch sequence; tests/test_driver.py pins scan == host loop
+bit-for-bit, and benchmarks/run.py times both (fig1/<algo> vs
+fig1/<algo>_scan).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+# (params, state, batch, round_key, **kwargs) -> (params, state, metrics)
+RoundFn = Callable[..., tuple[Pytree, dict, dict]]
+
+
+def _with_bits(metrics: dict, bits_per_round: Optional[int]) -> dict:
+    """Stack the per-round uplink payload next to the loss (f32: 32d bits of
+    a 100M-param model overflows int32)."""
+    if bits_per_round is None or "uplink_bits" in metrics:
+        return metrics
+    return {**metrics, "uplink_bits": jnp.asarray(bits_per_round, jnp.float32)}
+
+
+def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
+                  kwargs_fn=None, bits_per_round: Optional[int] = None,
+                  donate: bool = True):
+    """Jit one scanned chunk of ``num_rounds`` rounds.
+
+    Signature of the returned fn:
+        (params, state, data_state, key, t0) ->
+            (params, state, data_state, stacked_metrics)
+    ``t0`` is a traced scalar so successive chunks reuse one executable.
+    """
+
+    def chunk(params, state, data_state, key, t0):
+        def body(carry, t):
+            params, state, dstate = carry
+            dstate, batch = sampler.sample(dstate, t)
+            kw = kwargs_fn(t) if kwargs_fn is not None else {}
+            params, state, m = round_fn(params, state, batch,
+                                        jax.random.fold_in(key, t), **kw)
+            return (params, state, dstate), _with_bits(m, bits_per_round)
+
+        (params, state, data_state), hist = jax.lax.scan(
+            body, (params, state, data_state),
+            t0 + jnp.arange(num_rounds, dtype=jnp.int32))
+        return params, state, data_state, hist
+
+    return jax.jit(chunk, donate_argnums=(0, 1, 2) if donate else ())
+
+
+def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
+             rounds: int, key: jax.Array, chunk_size: int = 0,
+             kwargs_fn=None, bits_per_round: Optional[int] = None,
+             donate: bool = True, on_chunk=None,
+             ) -> tuple[Pytree, dict, dict]:
+    """Run ``rounds`` federated rounds on device in scanned chunks.
+
+    * ``sampler`` provides ``init_state()`` and ``sample(state, t)`` (see
+      ``repro.data.device.DeviceBigramSampler``).
+    * ``kwargs_fn(t)`` (optional) returns extra traced kwargs for the round,
+      e.g. ``lambda t: {"lr_scale": sched(t)}`` for a cosine server LR.
+    * ``chunk_size`` bounds rounds per dispatch (0 = all in one); metrics are
+      fetched to host once per chunk, and ``on_chunk(t_done, params, state,
+      chunk_hist)`` runs between chunks (logging / checkpointing).
+
+    Returns ``(params, state, history)`` with ``history`` a dict of
+    host-side ``(rounds,)`` arrays (``loss``, optionally ``uplink_bits``).
+    """
+    chunk_size = int(chunk_size) or int(rounds)
+    data_state = sampler.init_state()
+    compiled: dict[int, Callable] = {}
+    hists = []
+    t = 0
+    while t < rounds:
+        n = min(chunk_size, rounds - t)
+        if n not in compiled:       # tail chunk of a different length re-jits
+            compiled[n] = make_chunk_fn(
+                round_fn, sampler, n, kwargs_fn=kwargs_fn,
+                bits_per_round=bits_per_round, donate=donate)
+        params, state, data_state, hist = compiled[n](
+            params, state, data_state, key, jnp.asarray(t, jnp.int32))
+        hist = jax.tree.map(np.asarray, hist)      # ONE fetch per chunk
+        hists.append(hist)
+        t += n
+        if on_chunk is not None:
+            on_chunk(t, params, state, hist)
+    history = jax.tree.map(lambda *xs: np.concatenate(xs), *hists)
+    return params, state, history
+
+
+def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
+                  rounds: int, key: jax.Array, kwargs_fn=None,
+                  bits_per_round: Optional[int] = None, donate: bool = True,
+                  ) -> tuple[Pytree, dict, dict]:
+    """One-dispatch-per-round reference loop with the scan driver's exact
+    key/batch sequence (fold_in(key, t); device-side sampling).
+
+    Carries are still donated (ISSUE 2 satellite: no params/opt copy even on
+    the non-scan path); the remaining cost vs ``run_scan`` is R dispatches
+    and R blocking metric fetches -- precisely what fig1/<algo> vs
+    fig1/<algo>_scan measures.
+    """
+    data_state = sampler.init_state()
+    sample = jax.jit(sampler.sample)
+    step = jax.jit(round_fn, donate_argnums=(0, 1) if donate else ())
+    hists = []
+    for t in range(rounds):
+        tt = jnp.asarray(t, jnp.int32)
+        data_state, batch = sample(data_state, tt)
+        kw = kwargs_fn(tt) if kwargs_fn is not None else {}
+        params, state, m = step(params, state, batch,
+                                jax.random.fold_in(key, tt), **kw)
+        hists.append(jax.tree.map(np.asarray, _with_bits(m, bits_per_round)))
+    history = jax.tree.map(lambda *xs: np.stack(xs), *hists)
+    return params, state, history

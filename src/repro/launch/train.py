@@ -370,15 +370,40 @@ def to_shardings(mesh, pspec_tree):
 
 def train_loop(model_cfg: ModelConfig, safl_cfg: SAFLConfig, data,
                rounds: int, *, batch_per_client: int = 8, log_every: int = 10,
-               seed: int = 0):
-    """CPU-scale SAFL training on real (synthetic-dataset) batches."""
+               seed: int = 0, scan: bool = True, chunk_size: int = 0):
+    """CPU-scale SAFL training on real (synthetic-dataset) batches.
+
+    When ``data`` supports device-side sampling (``device_sampler``) the
+    whole run executes as scanned on-device chunks with donated carries
+    (launch/driver.py, DESIGN.md §6); metrics come back once per chunk.
+    Other datasets fall back to the host-driven loop (still with donated
+    params/opt buffers, so no per-round copy)."""
+    from repro.core.packed import make_packing_plan
     from repro.core.safl import init_safl, safl_round
     key = jax.random.key(seed)
     from repro.models.model import init_params
     params = init_params(model_cfg, key)
     opt = init_safl(safl_cfg, params)
     loss = lambda p, b: loss_fn(model_cfg, p, b)
-    round_jit = jax.jit(functools.partial(safl_round, safl_cfg, loss))
+    # static sketch layout built ONCE, outside any trace
+    plan = make_packing_plan(safl_cfg.sketch, params)
+    round_fn = functools.partial(safl_round, safl_cfg, loss, plan=plan)
+
+    if scan and hasattr(data, "device_sampler"):
+        from repro.launch.driver import run_scan
+        sampler = data.device_sampler(batch_per_client, safl_cfg.local_steps)
+
+        def on_chunk(t_done, _params, _opt, hist):
+            if log_every:
+                print(f"round {t_done - 1:4d}  loss {hist['loss'][-1]:.4f}")
+
+        params, opt, hist = run_scan(
+            round_fn, sampler, params, opt, rounds=rounds, key=key,
+            chunk_size=chunk_size or (log_every or rounds),
+            on_chunk=on_chunk)
+        return params, opt, [float(x) for x in hist["loss"]]
+
+    round_jit = jax.jit(round_fn, donate_argnums=(0, 1))
     history = []
     for t in range(rounds):
         batch = data.round_batch(batch_per_client, safl_cfg.local_steps, t)

@@ -102,3 +102,24 @@ def test_error_feedback_memory_accumulates():
     _, state, _ = baseline_round(cfg, loss_fn, params, state, b,
                                  jax.random.key(1))
     assert float(jnp.abs(state["err"]["W"]).sum()) > 0
+
+
+@pytest.mark.parametrize("name", ["fedavg", "topk_ef", "fetchsgd", "marina"])
+def test_baseline_round_is_purely_functional(name):
+    """The input state dict must come back untouched: an in-place mutation
+    (`state["err"] = ...`) is an aliasing bug under buffer donation and makes
+    the state an unsafe lax.scan carry (ISSUE 2)."""
+    cfg = next(c for c in CONFIGS if c.name == name)
+    params, loss_fn, make_batch = _task()
+    state = init_baseline_state(cfg, params, 4)
+    keys_before = set(state)
+    snapshot = jax.tree.map(lambda x: np.array(x), state)
+    b = split_client_batches(make_batch(jax.random.key(0)), 4,
+                             cfg.local_steps)
+    _, state2, _ = baseline_round(cfg, loss_fn, params, state, b,
+                                  jax.random.key(1))
+    assert state2 is not state
+    assert set(state) == keys_before
+    jax.tree.map(lambda x, ref: np.testing.assert_array_equal(
+        np.asarray(x), ref), state, snapshot)
+    assert int(state["round"]) == 0 and int(state2["round"]) == 1
