@@ -4,6 +4,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   fig1_resnet_scratch   : SAFL vs baselines, training-from-scratch regime
                           (paper Fig. 1, laptop-scale LM stand-in)
+  fig1_participation    : partial participation (p0.25 cohorts) + FedBuff-
+                          style async staleness rows on the scanned driver
   fig2_finetune         : finetuning regime comparison (paper Fig. 2)
   fig3_sketch_sizes     : convergence vs sketch size b (paper Fig. 3 / Fig. 6)
   table1_comm_bits      : per-round uplink bits per algorithm (paper Table 1)
@@ -13,7 +15,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--json]
 
-``--json`` additionally writes BENCH_sketch.json (name -> us_per_call) so
+``--json`` additionally writes BENCH_sketch.json (name -> us_per_call, plus
+``<name>.final_loss`` convergence keys for the participation/async rows) so
 the perf trajectory is machine-readable across PRs.
 """
 
@@ -31,6 +34,7 @@ import numpy as np
 from repro.core.adaptive import AdaConfig
 from repro.core.baselines import (BaselineConfig, baseline_round,
                                   init_baseline_state, uplink_bits)
+from repro.core.clipped import ClippedSAFLConfig, clipped_safl_round
 from repro.core.intrinsic_dim import intrinsic_dimension
 from repro.core.packed import (derive_round_params, desk_packed,
                                make_packing_plan, sk_packed)
@@ -38,6 +42,8 @@ from repro.core.safl import SAFLConfig, init_safl, safl_round
 from repro.core.sketch import (SketchConfig, desketch_tree, sk_leaf,
                                sketch_tree, total_sketch_bits)
 from repro.data import BigramLMData, LMDataConfig
+from repro.fed import (AsyncConfig, UniformParticipation, init_async_state,
+                       make_async_round)
 from repro.launch.driver import make_chunk_fn
 from repro.models import ModelConfig, init_params, loss_fn
 
@@ -48,9 +54,14 @@ GUARD = "--guard" in sys.argv
 _ROWS: dict[str, float] = {}
 
 
-def _emit(name: str, us: float, derived: str = "", json_row: bool = True) -> None:
+def _emit(name: str, us: float, derived: str = "", json_row: bool = True,
+          final_loss: float | None = None) -> None:
     if json_row:
         _ROWS[name] = us
+        if final_loss is not None:
+            # convergence next to cost: the participation/async rows pin
+            # their final training loss into the JSON trajectory too
+            _ROWS[f"{name}.final_loss"] = final_loss
     print(f"{name},{us:.0f},{derived}")
 
 # the paper's three experimental regimes, at laptop scale: a small LM plays
@@ -83,18 +94,26 @@ def _setup(algo: str, sketch_ratio: float, rounds: int, seed: int):
     params0 = init_params(MODEL, jax.random.key(seed))
     loss = lambda p, b: loss_fn(MODEL, p, b)
 
-    if algo in ("safl", "safl_srht", "safl_gaussian", "fedopt"):
+    if algo in ("safl", "safl_srht", "safl_gaussian", "fedopt", "clipped"):
         kind = {"safl": "countsketch", "safl_srht": "srht",
-                "safl_gaussian": "gaussian", "fedopt": "none"}[algo]
+                "safl_gaussian": "gaussian", "fedopt": "none",
+                "clipped": "countsketch"}[algo]
         cfg = SAFLConfig(
             sketch=SketchConfig(kind=kind, ratio=sketch_ratio, min_b=8),
             server=AdaConfig(name="amsgrad", lr=0.01),
             client_lr=0.5, local_steps=K,
             remat_local=False)     # bench model: remat buys nothing on CPU
         plan = make_packing_plan(cfg.sketch, params0)
-        round_fn = functools.partial(safl_round, cfg, loss, plan=plan)
-        init_state = lambda p: init_safl(cfg, p)
-        bits = total_sketch_bits(cfg.sketch, params0)
+        if algo == "clipped":      # SACFL: per-client delta clipping
+            cfg = ClippedSAFLConfig(base=cfg, clip_tau=1.0)
+            round_fn = functools.partial(clipped_safl_round, cfg, loss,
+                                         plan=plan)
+            init_state = lambda p: init_safl(cfg.base, p)
+            bits = total_sketch_bits(cfg.base.sketch, params0)
+        else:
+            round_fn = functools.partial(safl_round, cfg, loss, plan=plan)
+            init_state = lambda p: init_safl(cfg, p)
+            bits = total_sketch_bits(cfg.sketch, params0)
     else:
         server = {"fedavg": AdaConfig(name="sgd", lr=1.0),
                   "topk_ef": AdaConfig(name="sgd", lr=1.0),
@@ -117,13 +136,19 @@ def _setup(algo: str, sketch_ratio: float, rounds: int, seed: int):
         p = init_params(MODEL, jax.random.key(seed))
         return p, init_state(p)
 
-    return sampler, round_fn, fresh, bits
+    return sampler, round_fn, fresh, bits, cfg, plan
 
 
 def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
-           seed: int = 0, scan: bool = False):
+           seed: int = 0, scan: bool = False, participation=None,
+           async_cfg=None):
     """Train the bench model with one algorithm; returns (final_loss,
     us_per_round, uplink_bits_per_round).
+
+    ``participation`` (a repro.fed sampling policy) and ``async_cfg`` (a
+    repro.fed AsyncConfig, SAFL-family only) ride the scanned driver's
+    hooks; both require ``scan=True``.  Under participation the reported
+    bits are per-round for the SAMPLED cohort (per-client x cohort size).
 
     ``scan=False`` is the host-driven loop, timed END TO END: jit
     compilation at t=0, per-round host-side batch sampling (the legacy
@@ -142,11 +167,25 @@ def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
     batches under identical fold_in(key, t) round keys, so their
     trajectories agree bitwise (tests/test_driver.py pins scan == host loop
     exactly)."""
-    sampler, round_fn, fresh, bits = _setup(algo, sketch_ratio, rounds, seed)
+    sampler, round_fn, fresh, bits, cfg, plan = _setup(algo, sketch_ratio,
+                                                       rounds, seed)
     key = jax.random.key(1000)
 
+    if async_cfg is not None:
+        assert scan and algo in ("safl", "clipped")
+        base_init = fresh
+        round_fn = make_async_round(cfg, (lambda p, b: loss_fn(MODEL, p, b)),
+                                    async_cfg, plan)
+        fresh = lambda: (base_init()[0], init_async_state(
+            cfg, async_cfg, base_init()[0], plan, CLIENTS))
+    if participation is not None:
+        assert scan, "participation rows ride the scanned driver"
+        bits = bits * participation.cohort_size
+
     if scan:
-        chunk = make_chunk_fn(round_fn, sampler, rounds)
+        chunk = make_chunk_fn(round_fn, sampler, rounds,
+                              participation=participation,
+                              buffer=async_cfg is not None)
 
         def run():
             p, s = fresh()
@@ -193,6 +232,29 @@ def fig1_resnet_scratch():
         _emit(f"fig1/{algo}_scan", us_s,
               f"final_loss={final_s:.4f};steady_state;host_cold_us={us:.0f};"
               f"speedup={us / us_s:.2f}x")
+
+
+def fig1_participation():
+    """Partial participation + async staleness rows (repro.fed, DESIGN §7),
+    all on the scanned driver at steady state.  The _p0.25 rows sample a
+    1-of-5 cohort per round (uniform without replacement, keyed off the
+    round index); uplink bits are reported for the SAMPLED cohort.  The
+    _async row runs the FedBuff-style staleness buffer: uniform client
+    delays up to 2 rounds, arrivals discounted by (1+staleness)^-0.5.
+    Final losses are pinned into BENCH_sketch.json next to the round
+    times."""
+    pol = UniformParticipation(CLIENTS, frac=0.25, seed=123)
+    for algo in ("safl", "clipped"):
+        final, us, bits = _train(algo, scan=True, participation=pol)
+        _emit(f"fig1/{algo}_p0.25", us,
+              f"final_loss={final:.4f};uplink_bits={bits};"
+              f"cohort={pol.cohort_size}/{CLIENTS};steady_state",
+              final_loss=final)
+    acfg = AsyncConfig(max_delay=2, delay="uniform", staleness_alpha=0.5)
+    final, us, bits = _train("safl", scan=True, async_cfg=acfg)
+    _emit("fig1/safl_async", us,
+          f"final_loss={final:.4f};uplink_bits={bits};max_delay=2;"
+          f"staleness_alpha=0.5;steady_state", final_loss=final)
 
 
 def fig2_finetune():
@@ -314,14 +376,24 @@ def packed_vs_perleaf():
           f"speedup={us_perleaf / us_packed_ind:.2f}x")
 
 
+def _guarded_row(name: str) -> bool:
+    """Steady-state scanned rows only: fig1/*_scan plus the participation
+    (_p{frac}) and async-buffer (_async) rows, which also run as one
+    on-device scan with compilation excluded.  The *.final_loss convergence
+    keys are pins, not times -- never guarded."""
+    if name.endswith(".final_loss"):
+        return False
+    return (name.endswith("_scan") or name.endswith("_async")
+            or "_p0" in name)
+
+
 def _perf_guard(prev: dict[str, float]) -> list[str]:
-    """CI guard: fail when a scanned-round time regresses >2x against the
-    committed BENCH_sketch.json baseline.  Only the fig1/*_scan rows are
-    guarded -- they are steady-state per-round times with compilation
-    excluded, so they are the comparable signal across machines."""
+    """CI guard: fail when a guarded steady-state round time regresses >2x
+    against the committed BENCH_sketch.json baseline (comparable across
+    machines because compilation is excluded)."""
     fails = []
     for name, us in sorted(_ROWS.items()):
-        if not name.endswith("_scan"):
+        if not _guarded_row(name):
             continue
         old = prev.get(name)
         if old and us > 2.0 * old:
@@ -343,6 +415,7 @@ def main() -> None:
     table1_comm_bits()
     fig3_sketch_sizes()
     fig1_resnet_scratch()
+    fig1_participation()
     fig2_finetune()
     fig5_hessian_spectrum()
     sketch_ops()

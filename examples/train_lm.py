@@ -5,6 +5,13 @@ uncompressed FedOPT reference (deliverable b).
     PYTHONPATH=src python examples/train_lm.py [--rounds 200] [--big]
 
 --big uses a ~100M model (BERT-scale, the paper's language setup).
+--participation-frac 0.4 samples a 2-of-5 cohort per round (repro.fed);
+--async-buffer 2 runs the FedBuff-style staleness buffer with client delays
+up to 2 rounds.  Both ride the scanned driver's hooks and keep the
+trajectory resumable: each chunk checkpoint stores the (t, key) cursor, and
+because every per-round stream (data, cohorts, delays, sketch operators) is
+a pure function of the absolute round index, a restart from the cursor
+replays the identical trajectory.
 """
 import argparse
 import functools
@@ -19,6 +26,8 @@ from repro.core.packed import make_packing_plan
 from repro.core.safl import SAFLConfig, fedopt_round, init_safl, safl_round
 from repro.core.sketch import SketchConfig
 from repro.data import BigramLMData, LMDataConfig
+from repro.fed import AsyncConfig, UniformParticipation, init_async_state, \
+    make_async_round
 from repro.launch.driver import run_scan
 from repro.models import ModelConfig, init_params, loss_fn
 from repro.optim import cosine
@@ -30,6 +39,12 @@ ap.add_argument("--ratio", type=float, default=0.02)
 ap.add_argument("--ckpt", default="/tmp/safl_lm")
 ap.add_argument("--fedopt", action="store_true", help="run the uncompressed"
                 " reference instead of SAFL")
+ap.add_argument("--participation-frac", type=float, default=1.0,
+                help="fraction of clients sampled per round (repro.fed "
+                "uniform-without-replacement cohorts; 1.0 = all)")
+ap.add_argument("--async-buffer", type=int, default=0, metavar="MAX_DELAY",
+                help="run the FedBuff-style staleness buffer with client "
+                "delays up to MAX_DELAY rounds (0 = synchronous)")
 args = ap.parse_args()
 
 if args.big:  # ~100M (paper's BERT scale)
@@ -59,26 +74,57 @@ sched = cosine(args.rounds, warmup=10)
 # (launch/driver.py) scans whole chunks on device with donated carries and
 # checkpoints at chunk boundaries.  The cosine server LR rides in through
 # kwargs_fn as a function of the scanned round index.
+if args.fedopt and args.async_buffer > 0:
+    ap.error("--async-buffer is SAFL-only; drop --fedopt to run the "
+             "staleness buffer")
+
+plan = make_packing_plan(safl.sketch, params)
+async_cfg = None
 if args.fedopt:
     round_fn = functools.partial(fedopt_round, safl, loss)
+elif args.async_buffer > 0:
+    async_cfg = AsyncConfig(max_delay=args.async_buffer, delay="uniform")
+    round_fn = make_async_round(safl, loss, async_cfg, plan)
+    opt = init_async_state(safl, async_cfg, params, plan,
+                           data.cfg.num_clients)
 else:
-    plan = make_packing_plan(safl.sketch, params)
     round_fn = functools.partial(safl_round, safl, loss, plan=plan)
+
+participation = None
+if args.participation_frac < 1.0:
+    participation = UniformParticipation(data.cfg.num_clients,
+                                         frac=args.participation_frac)
+    print(f"partial participation: {participation.cohort_size}"
+          f"/{data.cfg.num_clients} clients per round")
+if async_cfg is not None:
+    print(f"async staleness buffer: max delay {async_cfg.max_delay} rounds")
 
 n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
 print(f"{'FedOPT' if args.fedopt else 'SAFL'} on {n/1e6:.1f}M params, "
       f"sketch ratio {args.ratio}")
 
+key = jax.random.key(0)
+
 
 def on_chunk(t_done, p, o, hist):
     print(f"round {t_done - 1:4d}  loss {hist['loss'][-1]:.4f}")
     if t_done < args.rounds:
-        save_checkpoint(args.ckpt, {"params": p, "opt": o}, step=t_done)
+        # resumable cursor: (t, key) pins where the trajectory restarts --
+        # data, cohort masks, delays and sketch operators are all pure
+        # functions of the absolute round index under this key
+        save_checkpoint(args.ckpt, {"params": p, "opt": o,
+                                    "cursor": {"t": jnp.asarray(t_done),
+                                               "key": jax.random.key_data(key)}},
+                        step=t_done)
 
 
 params, opt, hist = run_scan(
-    round_fn, sampler, params, opt, rounds=args.rounds, key=jax.random.key(0),
+    round_fn, sampler, params, opt, rounds=args.rounds, key=key,
     chunk_size=100, kwargs_fn=lambda t: {"lr_scale": sched(t)},
-    on_chunk=on_chunk)
-save_checkpoint(args.ckpt, {"params": params, "opt": opt}, step=args.rounds)
+    on_chunk=on_chunk, participation=participation,
+    buffer=async_cfg is not None)
+save_checkpoint(args.ckpt, {"params": params, "opt": opt,
+                            "cursor": {"t": jnp.asarray(args.rounds),
+                                       "key": jax.random.key_data(key)}},
+                step=args.rounds)
 print("checkpoint saved to", args.ckpt + ".npz")

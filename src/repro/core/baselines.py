@@ -39,7 +39,8 @@ from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
 from repro.core.packed import (derive_round_params, desk_flat,
                                make_packing_plan, pack_tree, sk_flat,
                                sk_packed_clients, unpack_tree)
-from repro.core.safl import SAFLConfig, client_delta
+from repro.core.safl import (SAFLConfig, client_delta, masked_mean,
+                             masked_mean_tree, masked_where_tree)
 from repro.core.sketch import SketchConfig
 
 Pytree = Any
@@ -176,14 +177,18 @@ def _deltas_and_losses(cfg: BaselineConfig, loss_fn, params, batch, eta):
 
 def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
                    state: dict, batch: Pytree, key: jax.Array, *,
-                   plan=None) -> tuple[Pytree, dict, dict]:
+                   plan=None, part_mask=None) -> tuple[Pytree, dict, dict]:
     """One baseline round.  PURELY FUNCTIONAL: the input ``state`` dict is
     never mutated -- a fresh dict is returned each round, which is what makes
     this a safe ``lax.scan`` carry and a safe donation target in the
     multi-round driver (an aliased in-place update would read freed buffers).
 
     ``plan`` (optional) is the static packing layout, built once by
-    multi-round callers as in ``safl_round``.
+    multi-round callers as in ``safl_round``.  ``part_mask`` (optional, (G,))
+    restricts the server aggregation to the round's sampled cohort
+    (repro.fed): unsampled clients transmit nothing -- their error-feedback
+    memories stay frozen and the server mean divides by the cohort size.  An
+    all-ones mask is bitwise the full-participation path.
     """
     eta = jnp.asarray(cfg.client_lr, jnp.float32)
     rnd = state["round"]
@@ -204,11 +209,11 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
         losses = l2[0]
     else:
         deltas, losses = _deltas_and_losses(cfg, loss_fn, params, batch, eta)
-    metrics = {"loss": jnp.mean(losses)}
+    metrics = {"loss": masked_mean(losses, part_mask)}
     G = jax.tree.leaves(deltas)[0].shape[0]
 
     if cfg.name == "fedavg" or cfg.name == "fedopt":
-        update = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        update = masked_mean_tree(deltas, part_mask)
         params, opt = apply_update(cfg.server, state["opt"], params, update)
         state = {**state, "opt": opt}
 
@@ -238,8 +243,14 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
             comp = jax.vmap(comp_one)(jnp.arange(G), a2)
         else:
             comp = jax.vmap(lambda v: topk_mask(v, k))(a2)
-        err = jax.vmap(lambda f: unpack_tree(plan, f, cast=False))(a2 - comp)
-        update = unpack_tree(plan, jnp.mean(comp, axis=0), cast=False)
+        err_flat = a2 - comp
+        if part_mask is not None:
+            # unsampled clients never compressed/transmitted: their error
+            # memory is untouched this round
+            old_flat = jax.vmap(lambda t: pack_tree(plan, t))(state["err"])
+            err_flat = jnp.where(part_mask[:, None] > 0, err_flat, old_flat)
+        err = jax.vmap(lambda f: unpack_tree(plan, f, cast=False))(err_flat)
+        update = unpack_tree(plan, masked_mean(comp, part_mask), cast=False)
         params, opt = apply_update(cfg.server, state["opt"], params, update)
         state = {**state, "err": err, "opt": opt}
 
@@ -263,9 +274,10 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
         if plan is None:
             plan = make_packing_plan(cfg.sketch, params)
         rp = derive_round_params(plan, key)
-        # clients sketch; server averages sketches (mergeable)
+        # clients sketch; server averages sketches (mergeable) -- over the
+        # sampled cohort only under partial participation
         sks = sk_packed_clients(plan, rp, deltas)           # (G, b_total)
-        s_mean = jnp.mean(sks.astype(jnp.float32), axis=0)
+        s_mean = masked_mean(sks.astype(jnp.float32), part_mask)
         mom = cfg.fetchsgd_momentum * state["sk_mom"] + s_mean
         er = state["sk_err"] + mom
         dense = desk_flat(plan, rp, er)                     # unsketch error acc
@@ -286,7 +298,7 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
         state = {**state, "sk_mom": mom, "sk_err": er, "opt": opt}
 
     elif cfg.name == "onebit_adam":
-        mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        mean_delta = masked_mean_tree(deltas, part_mask)
         warm = rnd < cfg.onebit_warmup
 
         def warm_branch(op):
@@ -304,8 +316,10 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
             a = jax.tree.map(lambda e, d: e + d, state_["err"], deltas)
             c = jax.tree.map(lambda t: jax.vmap(
                 lambda v: sign_quant(v.reshape(-1)).reshape(v.shape))(t), a)
-            err2 = jax.tree.map(lambda x, y: x - y, a, c)
-            u = jax.tree.map(lambda t: jnp.mean(t, axis=0), c)
+            err2 = masked_where_tree(part_mask,
+                                     jax.tree.map(lambda x, y: x - y, a, c),
+                                     state_["err"])
+            u = masked_mean_tree(c, part_mask)
             m2 = jax.tree.map(
                 lambda m, ui: cfg.server.beta1 * m + (1 - cfg.server.beta1) * ui,
                 state_["opt"]["m"], u)
@@ -331,7 +345,7 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
             plan = make_packing_plan(cfg.sketch, params)
 
         def full_fn(_):
-            return jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+            return masked_mean_tree(grads, part_mask)
 
         def diff_fn(_):
             # packed layout: one (G, d_total) buffer, one Bernoulli Rand-p
@@ -342,7 +356,7 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
             comp = jax.vmap(lambda g, v: randp_unbiased(
                 jax.random.fold_in(key, g), v, cfg.topk_ratio))(
                     jnp.arange(G), flat)
-            q = unpack_tree(plan, jnp.mean(comp, axis=0), cast=False)
+            q = unpack_tree(plan, masked_mean(comp, part_mask), cast=False)
             return jax.tree.map(lambda g0, qi: g0 + qi, state["g"], q)
 
         g_new = jax.lax.cond(full_round, full_fn, diff_fn, None)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.core.adaptive import apply_update
 from repro.core.packed import (derive_round_params, desk_packed,
                                make_packing_plan, sk_packed_clients)
-from repro.core.safl import SAFLConfig, client_delta
+from repro.core.safl import SAFLConfig, client_delta, masked_mean
 
 Pytree = Any
 LossFn = Callable[[Pytree, Any], jax.Array]
@@ -51,11 +51,12 @@ def clip_delta(cfg: ClippedSAFLConfig, delta: Pytree) -> Pytree:
 def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
                        params: Pytree, opt_state: dict, batch: Pytree,
                        round_key: jax.Array, *,
-                       plan=None) -> tuple[Pytree, dict, dict]:
+                       plan=None, part_mask=None) -> tuple[Pytree, dict, dict]:
     """One SAFL round with per-client delta clipping (heavy-tail defense).
 
-    batch leaves: (G, K, mb, ...) as in safl_round; ``plan`` as in
-    safl_round (built once by multi-round callers)."""
+    batch leaves: (G, K, mb, ...) as in safl_round; ``plan`` and
+    ``part_mask`` as in safl_round (plan built once by multi-round callers;
+    the mask restricts the server mean to the sampled cohort)."""
     base = cfg.base
     eta = jnp.asarray(base.client_lr, jnp.float32)
 
@@ -68,7 +69,7 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
         plan = make_packing_plan(base.sketch, params)
     rp = derive_round_params(plan, round_key)
     sketches = sk_packed_clients(plan, rp, deltas)
-    mbar = jnp.mean(sketches, axis=0)
+    mbar = masked_mean(sketches, part_mask)
     update = desk_packed(plan, rp, mbar)
     params, opt_state = apply_update(base.server, opt_state, params, update)
-    return params, opt_state, {"loss": jnp.mean(losses)}
+    return params, opt_state, {"loss": masked_mean(losses, part_mask)}

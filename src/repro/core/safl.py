@@ -56,6 +56,40 @@ def tree_sub(a: Pytree, b: Pytree) -> Pytree:
                                       - y.astype(jnp.float32)), a, b)
 
 
+def masked_mean(x: jax.Array, mask: jax.Array | None) -> jax.Array:
+    """Mean of ``x`` over its leading (client) axis, restricted to ``mask``.
+
+    ``mask`` is a (G,) participation mask (1.0 = sampled).  ``mask=None``
+    falls back to ``jnp.mean`` -- and an all-ones mask reproduces that path
+    BITWISE: ``1.0 * x`` is exact, the axis-0 reduction lowers identically,
+    and the denominator is the same float G (participation policies
+    guarantee >=1 sampled client, so the max() guard never rewrites it).
+    """
+    if mask is None:
+        return jnp.mean(x, axis=0)
+    m = mask.reshape(mask.shape + (1,) * (x.ndim - 1)).astype(x.dtype)
+    den = jnp.maximum(jnp.sum(mask), 1.0).astype(x.dtype)
+    return jnp.sum(x * m, axis=0) / den
+
+
+def masked_mean_tree(tree: Pytree, mask: jax.Array | None) -> Pytree:
+    """``masked_mean`` over every leaf (leaves have leading client axis G)."""
+    return jax.tree.map(lambda x: masked_mean(x, mask), tree)
+
+
+def masked_where_tree(mask: jax.Array | None, new: Pytree, old: Pytree) -> Pytree:
+    """Per-client state select: sampled clients take ``new`` leaves, the rest
+    keep ``old`` (leaves (G, ...)).  Used for error-feedback memories under
+    partial participation; ``mask=None`` (and, bitwise, an all-ones mask)
+    returns ``new`` unchanged."""
+    if mask is None:
+        return new
+    def sel(n, o):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m > 0, n, o)
+    return jax.tree.map(sel, new, old)
+
+
 def client_delta(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                  microbatches: Pytree, eta: jax.Array) -> tuple[Pytree, jax.Array]:
     """K local SGD steps for ONE client; returns (x_0 - x_K, mean local loss).
@@ -82,7 +116,7 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                opt_state: dict, batch: Pytree, round_key: jax.Array,
                eta_scale: jax.Array | float = 1.0,
                lr_scale: jax.Array | float = 1.0, *,
-               plan=None) -> tuple[Pytree, dict, dict]:
+               plan=None, part_mask=None) -> tuple[Pytree, dict, dict]:
     """One full SAFL round over all clients.
 
     ``batch`` leaves are shaped (G, K, mb, ...): G clients (sharded over the
@@ -90,7 +124,10 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     ``plan`` is the static packing layout; multi-round callers (the scan
     driver) build it ONCE outside the trace and thread it through via
     ``functools.partial`` -- only the round operator (``derive_round_params``)
-    depends on ``round_key``.  Returns (params, opt_state, metrics).
+    depends on ``round_key``.  ``part_mask`` (optional, (G,)) restricts the
+    server aggregation to the round's sampled cohort (repro.fed): the sketch
+    mean divides by the SAMPLED cohort size; an all-ones mask is bitwise the
+    full-participation path.  Returns (params, opt_state, metrics).
     """
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
 
@@ -109,8 +146,10 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
 
     # --- server: average of sketches == sketch of average (Property 1).
     # Under GSPMD this mean over the client axis is the ONLY cross-client
-    # collective, and it moves b_total floats, not d. ---
-    mbar = jnp.mean(sketches, axis=0)
+    # collective, and it moves b_total floats, not d.  Under partial
+    # participation only the sampled cohort contributes, and the mean
+    # divides by the cohort size, not N. ---
+    mbar = masked_mean(sketches, part_mask)
 
     # --- desk back to R^d and run ADA_OPT (Alg. 2); deterministic, so every
     # replica/client replays the identical server step. ---
@@ -118,15 +157,15 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     params, opt_state = apply_update(cfg.server, opt_state, params, update,
                                      lr_scale=lr_scale)
 
-    metrics = {"loss": jnp.mean(losses)}
+    metrics = {"loss": masked_mean(losses, part_mask)}
     return params, opt_state, metrics
 
 
 def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                  opt_state: dict, batch: Pytree, round_key: jax.Array,
                  eta_scale: jax.Array | float = 1.0,
-                 lr_scale: jax.Array | float = 1.0,
-                 ) -> tuple[Pytree, dict, dict]:
+                 lr_scale: jax.Array | float = 1.0, *,
+                 part_mask=None) -> tuple[Pytree, dict, dict]:
     """Uncompressed FedOPT (Reddi et al. 2020) round: the paper's
     'ambient-dimension' reference line (legend 4e7 / 1e8).  Identical to
     safl_round with the identity compressor -- clients uplink raw deltas,
@@ -134,10 +173,10 @@ def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
     deltas, losses = jax.vmap(
         lambda mb: client_delta(cfg, loss_fn, params, mb, eta))(batch)
-    update = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+    update = masked_mean_tree(deltas, part_mask)
     params, opt_state = apply_update(cfg.server, opt_state, params, update,
                                      lr_scale=lr_scale)
-    return params, opt_state, {"loss": jnp.mean(losses)}
+    return params, opt_state, {"loss": masked_mean(losses, part_mask)}
 
 
 def init_safl(cfg: SAFLConfig, params: Pytree) -> dict:
@@ -156,7 +195,15 @@ def split_client_batches(batch: Pytree, num_clients: int, local_steps: int) -> P
     return jax.tree.map(reshape, batch)
 
 
-def uplink_bits_per_round(cfg: SAFLConfig, params: Pytree) -> int:
-    """Per-client uplink payload in bits (paper's communication metric)."""
+def uplink_bits_per_round(cfg: SAFLConfig, params: Pytree,
+                          cohort_size: int = 1) -> int:
+    """Uplink payload in bits per round (paper's communication metric).
+
+    ``cohort_size`` is the number of clients that actually transmit in a
+    round: under partial participation (repro.fed) this is the SAMPLED
+    cohort size, not N -- pass ``policy.cohort_size`` to get the honest
+    per-round total.  The default (1) reports the per-client payload, the
+    seed semantics."""
     from repro.core.sketch import total_sketch_bits
-    return total_sketch_bits(cfg.sketch, params)
+    assert cohort_size >= 1, "a round must have at least one uplinking client"
+    return total_sketch_bits(cfg.sketch, params) * int(cohort_size)

@@ -1,3 +1,3 @@
-from repro.data.device import DeviceBigramSampler
+from repro.data.device import DeviceBigramSampler, DeviceGaussianClsSampler
 from repro.data.synthetic import (BigramLMData, ClsDataConfig, GaussianClsData,
                                   LMDataConfig, synthetic_lm_batch)

@@ -131,3 +131,92 @@ class DeviceBigramSampler:
                 toks[c, :, s + 1] = prev
         mb = B // self.local_steps
         return {"tokens": toks.reshape(G, self.local_steps, mb, S)}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGaussianClsSampler:
+    """Pure-jnp Gaussian-mixture classification sampler for the scan driver.
+
+    Same protocol and determinism contract as ``DeviceBigramSampler``: the
+    batch of client ``c`` in round ``t`` is a pure function of
+    ``(t, c, seed)`` via ``fold_in(fold_in(key(seed), t), c)``.  Labels are
+    drawn from the client's (possibly Dirichlet-skewed) label distribution
+    by inverse CDF on the cumulative row -- the same comparison-count trick
+    the bigram sampler uses -- and features are the class center plus unit
+    Gaussian noise.  ``host_round_batch`` replays the identical PRNG chain
+    eagerly per client and is pinned bitwise-equal (tests/test_fed.py), so
+    classification workloads ride the scanned driver on exactly the
+    trajectory a host-driven trainer would follow.
+    """
+    centers: np.ndarray            # (C, F) class centers
+    label_cum: np.ndarray          # (G, C) per-client cumulative label probs
+    batch_per_client: int
+    local_steps: int
+    num_features: int
+    num_classes: int
+    num_clients: int
+    seed: int
+
+    @classmethod
+    def from_data(cls, data, batch_per_client: int,
+                  local_steps: int) -> "DeviceGaussianClsSampler":
+        """Build from a host ``GaussianClsData`` (same centers/label skew)."""
+        cfg = data.cfg
+        cum = np.cumsum(np.asarray(data.label_probs, np.float32), axis=1)
+        return cls(centers=np.asarray(data.centers, np.float32),
+                   label_cum=cum.astype(np.float32),
+                   batch_per_client=batch_per_client, local_steps=local_steps,
+                   num_features=cfg.num_features, num_classes=cfg.num_classes,
+                   num_clients=cfg.num_clients, seed=cfg.seed)
+
+    # -- driver protocol ----------------------------------------------------
+
+    def init_state(self) -> Pytree:
+        return {"centers": jnp.asarray(self.centers, jnp.float32),
+                "label_cum": jnp.asarray(self.label_cum, jnp.float32)}
+
+    def _client_batch(self, centers, cum_c, key):
+        """One client's (B, F) features + (B,) labels from its fold_in key."""
+        B, C = self.batch_per_client, self.num_classes
+        k_y, k_x = jax.random.split(key)
+        u = jax.random.uniform(k_y, (B,))
+        y = jnp.minimum(jnp.sum(cum_c[None, :] < u[:, None], axis=1),
+                        C - 1).astype(jnp.int32)
+        x = centers[y] + jax.random.normal(k_x, (B, self.num_features))
+        return x.astype(jnp.float32), y
+
+    def sample(self, state: Pytree, t: jax.Array) -> tuple[Pytree, Pytree]:
+        """Draw round ``t``'s batch: x (G, K, mb, F), y (G, K, mb)."""
+        G, B, K = self.num_clients, self.batch_per_client, self.local_steps
+        round_key = jax.random.fold_in(jax.random.key(self.seed), t)
+        x, y = jax.vmap(lambda cum_c, c: self._client_batch(
+            state["centers"], cum_c, jax.random.fold_in(round_key, c)))(
+                state["label_cum"], jnp.arange(G))
+        mb = B // K
+        return state, {"x": x.reshape(G, K, mb, self.num_features),
+                       "y": y.reshape(G, K, mb)}
+
+    # -- convenience --------------------------------------------------------
+
+    def round_batch(self, t) -> Pytree:
+        """One round's batch, outside any scan (tests / host-loop parity)."""
+        return self.sample(self.init_state(), jnp.asarray(t, jnp.int32))[1]
+
+    def host_round_batch(self, t: int) -> Pytree:
+        """The same batch drawn eagerly per client on the host (numpy out);
+        bitwise-identical to ``sample`` -- the classification analogue of
+        ``DeviceBigramSampler.host_round_batch``."""
+        G, B, K = self.num_clients, self.batch_per_client, self.local_steps
+        F = self.num_features
+        round_key = jax.random.fold_in(jax.random.key(self.seed),
+                                       jnp.asarray(int(t), jnp.int32))
+        xs = np.empty((G, B, F), np.float32)
+        ys = np.empty((G, B), np.int32)
+        centers = jnp.asarray(self.centers, jnp.float32)
+        for c in range(G):
+            x, y = self._client_batch(centers,
+                                      jnp.asarray(self.label_cum[c]),
+                                      jax.random.fold_in(round_key, c))
+            xs[c], ys[c] = np.asarray(x), np.asarray(y)
+        mb = B // K
+        return {"x": xs.reshape(G, K, mb, F), "y": ys.reshape(G, K, mb)}

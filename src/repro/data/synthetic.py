@@ -125,6 +125,13 @@ class GaussianClsData:
                                *v.shape[2:])
         return out
 
+    def device_sampler(self, batch_per_client: int, local_steps: int):
+        """Pure-jnp sampler over the same centers/label skew, usable inside
+        a jitted multi-round scan (see repro.data.device)."""
+        from repro.data.device import DeviceGaussianClsSampler
+        return DeviceGaussianClsSampler.from_data(self, batch_per_client,
+                                                  local_steps)
+
 
 def synthetic_lm_batch(key: jax.Array, batch: int, seq: int,
                        vocab: int) -> dict:

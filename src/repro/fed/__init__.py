@@ -1,0 +1,9 @@
+"""Client participation subsystem: partial participation, async staleness
+buffers, and sampling policies for the on-device scan driver (DESIGN.md §7).
+"""
+
+from repro.fed.async_buffer import (AsyncConfig, init_async_state,
+                                    make_async_round)
+from repro.fed.participation import (AvailabilityTrace, FixedCohort,
+                                     FullParticipation, UniformParticipation,
+                                     masked_mean, masked_mean_tree)

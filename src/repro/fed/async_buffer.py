@@ -1,0 +1,210 @@
+"""FedBuff-style async staleness buffer for SAFL/SACFL rounds.
+
+Synchronous SAFL applies round t's averaged sketch immediately.  Real
+cross-device FL is asynchronous: a client's update lands at the server
+seconds-to-rounds after the model it was computed against (FedBuff, Nguyen
+et al. 2022).  This module simulates that delayed-gradient regime ON DEVICE,
+inside the driver's ``lax.scan``:
+
+* Each round, every (sampled) client sketches its local delta with the
+  round's operator as usual; the ``(G, b_total)`` payload is pushed into a
+  ring buffer of the last D generation rounds that lives in the donated
+  scan carry (``state["buf"]``/``state["bufw"]``).
+* A deterministic **delay policy** assigns client c of generation round g a
+  delay ``d(g, c) in [0, max_delay]`` -- a pure function of
+  ``fold_in(fold_in(key(seed), g), c)``, so arrivals are recomputable at pop
+  time and nothing but the payloads needs storing.
+* At round t the server pops every payload arriving now (generated at
+  ``g = t - d`` with delay exactly d), aggregates arrivals **per generation
+  round in sketch space** (Property 1 linearity holds only within one round
+  operator), desketches each generation group with ITS OWN operator --
+  re-derived from ``fold_in(base_key, g)``, which is why the driver's
+  ``buffer=`` hook threads ``t`` and the base key into the round -- and
+  applies the staleness-weighted combination
+
+      update = sum_g desk_g( sum_{c arriving} w(d) * sk_g^c / W ),
+      w(d) = (1 + d)^(-staleness_alpha),   W = total arrival weight,
+
+  the FedBuff polynomial staleness discount.  A round with no arrivals
+  applies a zero pseudo-gradient (the adaptive server still decays its
+  moments -- documented behavior, guarded against 0/0).
+
+**Parity pin** (tests/test_fed.py): with ``delay="zero"`` every payload
+arrives in its own generation round with weight ``(1+0)^-a = 1.0``, the
+buffer reduces to the synchronous masked mean, and the trajectory is
+bit-identical to ``safl_round`` under the same keys (the d>0 terms desketch
+an exactly-zero payload, which is exact in IEEE addition up to the sign of
+zero).  The buffer accumulates in float32, so the pin assumes the default
+float32 ``transport_dtype``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import apply_update, init_opt_state
+from repro.core.clipped import ClippedSAFLConfig, clip_delta
+from repro.core.packed import (PackingPlan, derive_round_params, desk_flat,
+                               sk_packed_clients, unpack_tree)
+from repro.core.safl import SAFLConfig, client_delta, masked_mean
+
+Pytree = Any
+LossFn = Callable[[Pytree, Any], jax.Array]
+
+_DELAY_STREAM_TAG = 7919   # decorrelates the delay stream from the data
+                           # sampler's fold_in(key(seed), t, c) chain
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Staleness-buffer configuration.
+
+    ``max_delay`` is the largest client delay in rounds; the carry buffer
+    holds D = max_delay + 1 generation rounds, so every payload arrives
+    before its slot is recycled.  ``delay`` picks the deterministic delay
+    policy:
+
+    * ``"zero"``    -- every client arrives immediately (the synchronous
+                       parity pin);
+    * ``"stagger"`` -- client c of generation g is delayed ``(c + g) % D``
+                       rounds: deterministic, covers every delay, no RNG;
+    * ``"uniform"`` -- iid uniform over [0, max_delay] from the
+                       per-(generation, client) fold_in stream.
+    """
+    max_delay: int = 2
+    delay: str = "uniform"          # zero | stagger | uniform
+    staleness_alpha: float = 0.5    # w(d) = (1 + d)^-alpha (FedBuff disc.)
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.max_delay >= 0
+        assert self.delay in ("zero", "stagger", "uniform")
+        assert self.staleness_alpha >= 0.0
+
+    @property
+    def buffer_rounds(self) -> int:
+        return self.max_delay + 1
+
+    def delays(self, g: jax.Array, num_clients: int) -> jax.Array:
+        """(G,) int32 delays of generation-round ``g``'s clients; a pure
+        traced function of (g, client, seed) -- recomputed identically at
+        push and pop, so delays never need to be stored."""
+        D = self.buffer_rounds
+        clients = jnp.arange(num_clients)
+        if self.delay == "zero" or D == 1:
+            return jnp.zeros((num_clients,), jnp.int32)
+        if self.delay == "stagger":
+            return ((clients + g) % D).astype(jnp.int32)
+        key_g = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.seed), _DELAY_STREAM_TAG), g)
+        return jax.vmap(lambda c: jax.random.randint(
+            jax.random.fold_in(key_g, c), (), 0, D, dtype=jnp.int32))(clients)
+
+
+def _split_cfg(cfg) -> tuple[SAFLConfig, ClippedSAFLConfig | None]:
+    if isinstance(cfg, ClippedSAFLConfig):
+        return cfg.base, cfg
+    return cfg, None
+
+
+def init_async_state(cfg, acfg: AsyncConfig, params: Pytree,
+                     plan: PackingPlan, num_clients: int) -> dict:
+    """Server opt state + the staleness ring buffer (scan-carry resident).
+
+    ``buf[g % D]`` holds generation g's per-client sketch payloads
+    ``(G, b_total)`` for the D most recent generations; ``bufw`` the
+    matching participation weights (0 for unsampled clients).  ``cfg`` is a
+    ``SAFLConfig`` or (for SACFL) a ``ClippedSAFLConfig``."""
+    base, _ = _split_cfg(cfg)
+    D = acfg.buffer_rounds
+    return {"opt": init_opt_state(base.server, params),
+            "buf": jnp.zeros((D, num_clients, plan.b_total), jnp.float32),
+            "bufw": jnp.zeros((D, num_clients), jnp.float32)}
+
+
+def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
+                     plan: PackingPlan):
+    """Build the async round function for the driver's ``buffer=`` hook.
+
+    ``cfg`` is a ``SAFLConfig``, or a ``ClippedSAFLConfig`` to run the
+    client half with SACFL's clipped deltas (heavy-tail setting).
+
+    Signature of the returned fn (driver-compatible plus the buffer kwargs
+    the hook supplies):
+
+        round_fn(params, state, batch, round_key, *, t, base_key,
+                 part_mask=None) -> (params, state, metrics)
+
+    ``t`` is the traced round index (ring-buffer arithmetic + delay policy);
+    ``base_key`` is the run key, from which generation round g's sketch
+    operator is re-derived as ``fold_in(base_key, g)`` when its delayed
+    payload is desketched."""
+    base, clip = _split_cfg(cfg)
+    D = acfg.buffer_rounds
+
+    def round_fn(params, state, batch, round_key, *, t, base_key,
+                 part_mask=None, lr_scale=1.0):
+        eta = jnp.asarray(base.client_lr, jnp.float32)
+
+        def one_client(mb):
+            delta, l = client_delta(base, loss_fn, params, mb, eta)
+            return (clip_delta(clip, delta), l) if clip is not None \
+                else (delta, l)
+
+        deltas, losses = jax.vmap(one_client)(batch)
+        G = jax.tree.leaves(deltas)[0].shape[0]
+        mask = jnp.ones((G,), jnp.float32) if part_mask is None else part_mask
+
+        # -- push: generation t's payloads claim slot t % D (its previous
+        # tenant, generation t - D, fully drained by round t - 1) --
+        rp_t = derive_round_params(plan, round_key)
+        sks = sk_packed_clients(plan, rp_t, deltas).astype(jnp.float32)
+        slot_t = jnp.mod(t, D)
+        buf = state["buf"].at[slot_t].set(sks)
+        bufw = state["bufw"].at[slot_t].set(mask)
+
+        # -- pop: arrivals are recomputed, not stored.  Client c of
+        # generation g = t - d arrives now iff its delay is exactly d; each
+        # generation group is summed in ITS OWN sketch space, then
+        # desketched with ITS OWN round operator.  The d = 0 group reads the
+        # values just pushed, so it uses ``sks``/``mask`` directly (common
+        # subexpression; buf[slot_t] holds exactly these arrays), keeping the
+        # d = 0 data path op-for-op the synchronous one.  With the "zero"
+        # delay policy the d > 0 arrival predicates are compile-time False,
+        # so those terms constant-fold away and the whole round lowers to
+        # the synchronous program -- the bitwise parity pin. --
+        weighted = []                     # (W_d, S_d, rp_g) per delay
+        for d in range(D):                # static: D is a config constant
+            g = t - d
+            arrive = acfg.delays(g, G) == d
+            if d == 0:
+                payload, w_in = sks, mask
+            else:
+                arrive = arrive & (g >= 0)
+                payload = buf[jnp.mod(g, D)]
+                w_in = bufw[jnp.mod(g, D)]
+            if acfg.delay == "zero" and d > 0:
+                continue                  # statically empty arrival group
+            w = w_in * arrive * ((1.0 + d) ** -acfg.staleness_alpha)
+            S_d = jnp.sum(w[:, None] * payload, axis=0)
+            rp_g = rp_t if d == 0 else derive_round_params(
+                plan, jax.random.fold_in(base_key, g))
+            weighted.append((jnp.sum(w), S_d, rp_g))
+
+        W = sum(wd for wd, _, _ in weighted)
+        W_safe = jnp.where(W > 0, W, 1.0)   # no arrivals -> zero update
+        update_flat = sum(desk_flat(plan, rp_g, S_d / W_safe)
+                          for _, S_d, rp_g in weighted)
+        update = unpack_tree(plan, update_flat)
+
+        params, opt = apply_update(base.server, state["opt"], params, update,
+                                   lr_scale=lr_scale)
+        metrics = {"loss": masked_mean(losses, part_mask),
+                   "arrival_weight": W}
+        return params, {"opt": opt, "buf": buf, "bufw": bufw}, metrics
+
+    return round_fn

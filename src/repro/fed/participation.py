@@ -1,0 +1,148 @@
+"""Client participation policies: who reports in round t.
+
+The paper's setting has all N clients uplink every round; real federated
+deployments do not (FetchSGD, Rothchild et al. 2020; FedBuff, Nguyen et al.
+2022).  A *participation policy* decides the round-t cohort and emits a
+``(num_clients,)`` 0/1 mask that the round functions consume as
+``part_mask`` -- the server mean over the packed ``(G, b_total)`` sketch
+payload (and over baseline deltas / error-feedback state) then divides by
+the SAMPLED cohort size (``core.safl.masked_mean``).
+
+Design constraints (DESIGN.md §7):
+
+* **Scannable.**  ``mask(t)`` is a pure traced function of the round index,
+  so the on-device driver (``launch/driver.py``) evaluates it inside its
+  ``lax.scan`` body; nothing about participation leaves the device.
+* **Bit-reproducible.**  Randomized cohorts derive from
+  ``fold_in(fold_in(key(seed), t), c)`` -- the same per-(round, client)
+  stream discipline the device data sampler uses -- so the mask of round t
+  is independent of chunking, of previous rounds, and of how the run is
+  resumed.
+* **Never empty.**  Every policy guarantees >=1 sampled client per round
+  (asserted at construction); the masked-mean denominator therefore never
+  hits the max() guard, and an all-ones mask reproduces the
+  full-participation path bitwise.
+
+In simulation all G clients still *compute* (static shapes under vmap/scan);
+the mask governs what the server aggregates -- standard FL-simulation
+semantics (unsampled work is discarded, matching a real deployment where it
+was never run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# re-exported for convenience: the aggregation helpers live in core so the
+# round families can use them without importing repro.fed
+from repro.core.safl import masked_mean, masked_mean_tree  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformParticipation:
+    """Uniform-without-replacement cohort of fixed size m per round.
+
+    Client c's round-t variate is ``uniform(fold_in(fold_in(key(seed), t),
+    c))``; the cohort is the m smallest variates -- exactly m clients, no
+    replacement, and each client's stream is independent of N (the variate
+    of client c never changes when clients are added).
+    """
+    num_clients: int
+    frac: float = 0.25          # sampled fraction; cohort m = round(frac*N)
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.num_clients >= 1
+        assert 0.0 < self.frac <= 1.0, f"frac {self.frac} not in (0, 1]"
+        assert self.cohort_size >= 1, "policy must sample >=1 client"
+
+    @property
+    def cohort_size(self) -> int:
+        return max(1, int(round(self.frac * self.num_clients)))
+
+    def mask(self, t: jax.Array) -> jax.Array:
+        key_t = jax.random.fold_in(jax.random.key(self.seed), t)
+        u = jax.vmap(lambda c: jax.random.uniform(
+            jax.random.fold_in(key_t, c)))(jnp.arange(self.num_clients))
+        order = jnp.argsort(u)
+        return jnp.zeros((self.num_clients,), jnp.float32).at[
+            order[:self.cohort_size]].set(1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedCohort:
+    """A static cohort: the same client subset reports every round."""
+    num_clients: int
+    clients: tuple[int, ...] = (0,)
+
+    def __post_init__(self):
+        assert len(self.clients) >= 1, "policy must sample >=1 client"
+        assert all(0 <= c < self.num_clients for c in self.clients)
+
+    @property
+    def cohort_size(self) -> int:
+        return len(set(self.clients))
+
+    def mask(self, t: jax.Array) -> jax.Array:
+        m = np.zeros((self.num_clients,), np.float32)
+        m[list(self.clients)] = 1.0
+        return jnp.asarray(m)
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityTrace:
+    """Cyclic availability: round t's cohort is row ``t % P`` of a fixed
+    (P, num_clients) 0/1 trace -- diurnal/charging-window availability at
+    simulation scale.  ``round_robin`` builds the canonical cyclic split
+    where client c is available iff ``c % groups == t % groups``."""
+    trace: tuple[tuple[float, ...], ...]     # (P, N) rows of 0/1
+
+    def __post_init__(self):
+        assert len(self.trace) >= 1
+        n = len(self.trace[0])
+        assert all(len(row) == n for row in self.trace)
+        assert all(sum(row) >= 1 for row in self.trace), \
+            "every trace row must have >=1 available client"
+
+    @classmethod
+    def round_robin(cls, num_clients: int, groups: int) -> "AvailabilityTrace":
+        assert 1 <= groups <= num_clients
+        rows = tuple(tuple(1.0 if c % groups == g else 0.0
+                           for c in range(num_clients))
+                     for g in range(groups))
+        return cls(trace=rows)
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.trace[0])
+
+    @property
+    def cohort_size(self) -> int:
+        """Largest per-round cohort (upper bound for bits accounting)."""
+        return int(max(sum(row) for row in self.trace))
+
+    def mask(self, t: jax.Array) -> jax.Array:
+        trace = jnp.asarray(self.trace, jnp.float32)
+        return trace[jnp.mod(t, trace.shape[0])]
+
+
+@dataclasses.dataclass(frozen=True)
+class FullParticipation:
+    """All N clients every round -- the paper's setting, as a policy.  Its
+    all-ones mask routes through the masked aggregation path and is pinned
+    bitwise-equal to passing no mask at all (tests/test_fed.py)."""
+    num_clients: int
+
+    def __post_init__(self):
+        assert self.num_clients >= 1
+
+    @property
+    def cohort_size(self) -> int:
+        return self.num_clients
+
+    def mask(self, t: jax.Array) -> jax.Array:
+        return jnp.ones((self.num_clients,), jnp.float32)

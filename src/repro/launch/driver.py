@@ -30,6 +30,15 @@ aliasing bug under donation).
 and batch sequence; tests/test_driver.py pins scan == host loop
 bit-for-bit, and benchmarks/run.py times both (fig1/<algo> vs
 fig1/<algo>_scan).
+
+Participation hooks (DESIGN.md §7, ``repro.fed``): ``participation=`` takes
+a sampling policy whose ``mask(t)`` is evaluated inside the scan body and
+passed to the round as ``part_mask`` (the per-round uplink-bits metric then
+reports the SAMPLED cohort: per-client bits x mask sum); ``buffer=True``
+additionally threads the traced round index ``t`` and the run's base key
+into the round as ``t=``/``base_key=`` kwargs -- what an async staleness
+buffer (``repro.fed.async_buffer``) needs to address its ring buffer and
+re-derive older rounds' sketch operators at arrival time.
 """
 
 from __future__ import annotations
@@ -45,33 +54,55 @@ Pytree = Any
 RoundFn = Callable[..., tuple[Pytree, dict, dict]]
 
 
-def _with_bits(metrics: dict, bits_per_round: Optional[int]) -> dict:
+def _with_bits(metrics: dict, bits_per_round: Optional[int],
+               mask=None) -> dict:
     """Stack the per-round uplink payload next to the loss (f32: 32d bits of
-    a 100M-param model overflows int32)."""
+    a 100M-param model overflows int32).  With a participation mask the
+    honest per-round figure is per-client bits x the sampled cohort size,
+    not x N."""
     if bits_per_round is None or "uplink_bits" in metrics:
         return metrics
-    return {**metrics, "uplink_bits": jnp.asarray(bits_per_round, jnp.float32)}
+    bits = jnp.asarray(bits_per_round, jnp.float32)
+    if mask is not None:
+        bits = bits * jnp.sum(mask)
+    return {**metrics, "uplink_bits": bits}
+
+
+def _round_kwargs(t, key, kwargs_fn, participation, buffer):
+    """Per-round traced kwargs for the round fn + the round's cohort mask."""
+    kw = dict(kwargs_fn(t)) if kwargs_fn is not None else {}
+    mask = None
+    if participation is not None:
+        mask = participation.mask(t)
+        kw["part_mask"] = mask
+    if buffer:
+        kw["t"] = t
+        kw["base_key"] = key
+    return kw, mask
 
 
 def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
                   kwargs_fn=None, bits_per_round: Optional[int] = None,
-                  donate: bool = True):
+                  donate: bool = True, participation=None,
+                  buffer: bool = False):
     """Jit one scanned chunk of ``num_rounds`` rounds.
 
     Signature of the returned fn:
         (params, state, data_state, key, t0) ->
             (params, state, data_state, stacked_metrics)
     ``t0`` is a traced scalar so successive chunks reuse one executable.
+    ``participation``/``buffer`` are the repro.fed hooks (module docstring).
     """
 
     def chunk(params, state, data_state, key, t0):
         def body(carry, t):
             params, state, dstate = carry
             dstate, batch = sampler.sample(dstate, t)
-            kw = kwargs_fn(t) if kwargs_fn is not None else {}
+            kw, mask = _round_kwargs(t, key, kwargs_fn, participation, buffer)
             params, state, m = round_fn(params, state, batch,
                                         jax.random.fold_in(key, t), **kw)
-            return (params, state, dstate), _with_bits(m, bits_per_round)
+            return (params, state, dstate), _with_bits(m, bits_per_round,
+                                                       mask)
 
         (params, state, data_state), hist = jax.lax.scan(
             body, (params, state, data_state),
@@ -84,8 +115,8 @@ def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
 def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
              rounds: int, key: jax.Array, chunk_size: int = 0,
              kwargs_fn=None, bits_per_round: Optional[int] = None,
-             donate: bool = True, on_chunk=None,
-             ) -> tuple[Pytree, dict, dict]:
+             donate: bool = True, on_chunk=None, participation=None,
+             buffer: bool = False) -> tuple[Pytree, dict, dict]:
     """Run ``rounds`` federated rounds on device in scanned chunks.
 
     * ``sampler`` provides ``init_state()`` and ``sample(state, t)`` (see
@@ -95,6 +126,9 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     * ``chunk_size`` bounds rounds per dispatch (0 = all in one); metrics are
       fetched to host once per chunk, and ``on_chunk(t_done, params, state,
       chunk_hist)`` runs between chunks (logging / checkpointing).
+    * ``participation``/``buffer`` are the repro.fed hooks (module
+      docstring): the cohort mask is a pure function of the absolute round
+      index, so chunk splits leave trajectories bit-identical.
 
     Returns ``(params, state, history)`` with ``history`` a dict of
     host-side ``(rounds,)`` arrays (``loss``, optionally ``uplink_bits``).
@@ -109,7 +143,8 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
         if n not in compiled:       # tail chunk of a different length re-jits
             compiled[n] = make_chunk_fn(
                 round_fn, sampler, n, kwargs_fn=kwargs_fn,
-                bits_per_round=bits_per_round, donate=donate)
+                bits_per_round=bits_per_round, donate=donate,
+                participation=participation, buffer=buffer)
         params, state, data_state, hist = compiled[n](
             params, state, data_state, key, jnp.asarray(t, jnp.int32))
         hist = jax.tree.map(np.asarray, hist)      # ONE fetch per chunk
@@ -124,9 +159,11 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
 def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
                   rounds: int, key: jax.Array, kwargs_fn=None,
                   bits_per_round: Optional[int] = None, donate: bool = True,
+                  participation=None, buffer: bool = False,
                   ) -> tuple[Pytree, dict, dict]:
     """One-dispatch-per-round reference loop with the scan driver's exact
-    key/batch sequence (fold_in(key, t); device-side sampling).
+    key/batch sequence (fold_in(key, t); device-side sampling), including
+    the participation/buffer hooks (module docstring).
 
     Carries are still donated (ISSUE 2 satellite: no params/opt copy even on
     the non-scan path); the remaining cost vs ``run_scan`` is R dispatches
@@ -140,9 +177,10 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     for t in range(rounds):
         tt = jnp.asarray(t, jnp.int32)
         data_state, batch = sample(data_state, tt)
-        kw = kwargs_fn(tt) if kwargs_fn is not None else {}
+        kw, mask = _round_kwargs(tt, key, kwargs_fn, participation, buffer)
         params, state, m = step(params, state, batch,
                                 jax.random.fold_in(key, tt), **kw)
-        hists.append(jax.tree.map(np.asarray, _with_bits(m, bits_per_round)))
+        hists.append(jax.tree.map(np.asarray,
+                                  _with_bits(m, bits_per_round, mask)))
     history = jax.tree.map(lambda *xs: np.stack(xs), *hists)
     return params, state, history

@@ -1,0 +1,374 @@
+"""repro.fed: participation policies, masked aggregation, async buffer.
+
+Pins the ISSUE 3 contracts:
+  * an all-ones participation mask reproduces the full-participation path
+    BITWISE for safl, clipped safl, and the fetchsgd/topk_ef baselines
+    under run_scan;
+  * participation masks are pure functions of the absolute round index
+    (chunk-split invariance) and always sample >= 1 client;
+  * the async staleness buffer with delay=0 is bit-identical to the
+    synchronous scan path, and scan == host loop under real delays;
+  * the device-side Gaussian classification sampler is pinned bitwise to
+    its host_round_batch mirror and rides the scan driver.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaConfig
+from repro.core.baselines import (BaselineConfig, baseline_round,
+                                  init_baseline_state)
+from repro.core.clipped import ClippedSAFLConfig, clipped_safl_round
+from repro.core.packed import make_packing_plan
+from repro.core.safl import (SAFLConfig, init_safl, masked_mean, safl_round,
+                             uplink_bits_per_round)
+from repro.core.sketch import SketchConfig
+from repro.data import ClsDataConfig, GaussianClsData
+from repro.fed import (AsyncConfig, AvailabilityTrace, FixedCohort,
+                       FullParticipation, UniformParticipation,
+                       init_async_state, make_async_round)
+from repro.launch.driver import run_host_loop, run_scan
+
+G = 4   # clients in the linear task
+
+
+class _LinearSampler:
+    """Minimal driver-protocol sampler over a linear regression task."""
+
+    def __init__(self, clients=G, local_steps=2, mb=4):
+        self.shape = (clients, local_steps, mb, 16)
+        self.W = np.asarray(jax.random.normal(jax.random.key(1), (16, 4)))
+
+    def init_state(self):
+        return {"W": jnp.asarray(self.W, jnp.float32)}
+
+    def sample(self, state, t):
+        x = jax.random.normal(jax.random.fold_in(jax.random.key(11), t),
+                              self.shape)
+        return state, {"x": x, "y": x @ state["W"]}
+
+
+def _linear_loss(params, batch):
+    return jnp.mean((batch["x"] @ params["W"] - batch["y"]) ** 2)
+
+
+def _params0():
+    return {"W": jnp.zeros((16, 4))}
+
+
+_SK = SketchConfig(kind="countsketch", ratio=0.25, min_b=8)
+
+
+def _safl_setup(clip=False):
+    base = SAFLConfig(sketch=_SK, server=AdaConfig(name="amsgrad", lr=0.05),
+                      client_lr=0.05, local_steps=2)
+    plan = make_packing_plan(_SK, _params0())
+    if clip:
+        cfg = ClippedSAFLConfig(base=base, clip_tau=0.5)
+        round_fn = functools.partial(clipped_safl_round, cfg, _linear_loss,
+                                     plan=plan)
+    else:
+        cfg = base
+        round_fn = functools.partial(safl_round, cfg, _linear_loss, plan=plan)
+    fresh = lambda: (_params0(), init_safl(base, _params0()))
+    return cfg, plan, round_fn, fresh
+
+
+def _baseline_setup(name):
+    cfg = BaselineConfig(name=name, client_lr=0.05, local_steps=2,
+                         topk_ratio=0.25, sketch=_SK,
+                         server=AdaConfig(name="sgd", lr=0.5))
+    plan = make_packing_plan(_SK, _params0())
+    round_fn = functools.partial(baseline_round, cfg, _linear_loss, plan=plan)
+    fresh = lambda: (_params0(),
+                     init_baseline_state(cfg, _params0(), G, plan=plan))
+    return cfg, plan, round_fn, fresh
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# masked aggregation: all-ones mask == full participation, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["safl", "clipped", "fetchsgd", "topk_ef",
+                                  "fedavg"])
+def test_all_ones_mask_is_full_participation_bitwise(algo):
+    """Routing through the masked-aggregation path with an all-ones mask
+    reproduces today's full-participation scan rows bit for bit."""
+    if algo in ("safl", "clipped"):
+        _, _, round_fn, fresh = _safl_setup(clip=algo == "clipped")
+    else:
+        _, _, round_fn, fresh = _baseline_setup(algo)
+    key = jax.random.key(5)
+    p1, s1, h1 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key)
+    p2, s2, h2 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key, participation=FullParticipation(G))
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(s1, s2)
+
+
+def test_partial_participation_changes_trajectory_but_stays_finite():
+    _, _, round_fn, fresh = _safl_setup()
+    key = jax.random.key(5)
+    pol = UniformParticipation(G, frac=0.5, seed=3)
+    p1, s1, h1 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key)
+    p2, s2, h2 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key, participation=pol)
+    assert np.isfinite(h2["loss"]).all()
+    assert not np.array_equal(h1["loss"], h2["loss"])
+
+
+def test_partial_participation_error_feedback_freezes_unsampled():
+    """topk_ef: a client outside the cohort must keep its error memory
+    untouched that round."""
+    cfg, plan, round_fn, fresh = _baseline_setup("topk_ef")
+    smp = _LinearSampler()
+    params, state = fresh()
+    _, batch = smp.sample(smp.init_state(), jnp.asarray(0, jnp.int32))
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    _, s2, _ = baseline_round(cfg, _linear_loss, params, state, batch,
+                              jax.random.key(0), plan=plan, part_mask=mask)
+    for e_new, e_old in zip(jax.tree.leaves(s2["err"]),
+                            jax.tree.leaves(state["err"])):
+        # unsampled clients 1 and 3: error memory unchanged (zeros at t=0)
+        np.testing.assert_array_equal(np.asarray(e_new)[1], np.asarray(e_old)[1])
+        np.testing.assert_array_equal(np.asarray(e_new)[3], np.asarray(e_old)[3])
+        # sampled clients accumulated a residual
+        assert np.abs(np.asarray(e_new)[0]).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# policies: determinism, cohort guarantees, cohort-size accounting
+# ---------------------------------------------------------------------------
+
+def test_participation_mask_deterministic_across_chunk_splits():
+    _, _, round_fn, fresh = _safl_setup()
+    key = jax.random.key(7)
+    pol = UniformParticipation(G, frac=0.5, seed=9)
+    p1, s1, h1 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key, participation=pol, bits_per_round=100)
+    p2, s2, h2 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key, participation=pol, bits_per_round=100,
+                          chunk_size=2)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(s1, s2)
+    # uplink bits reported for the SAMPLED cohort: per-client bits x cohort
+    np.testing.assert_array_equal(h1["uplink_bits"], np.full(4, 200.0))
+
+
+def test_uniform_policy_samples_exact_cohort_every_round():
+    pol = UniformParticipation(5, frac=0.4, seed=0)
+    masks = np.asarray(jax.vmap(pol.mask)(jnp.arange(50)))
+    assert pol.cohort_size == 2
+    np.testing.assert_array_equal(masks.sum(axis=1), np.full(50, 2.0))
+    # not constant: different rounds sample different cohorts
+    assert len({tuple(r) for r in masks}) > 1
+    # pure function of (round, seed): a fresh policy object agrees
+    masks2 = np.asarray(jax.vmap(UniformParticipation(5, frac=0.4, seed=0)
+                                 .mask)(jnp.arange(50)))
+    np.testing.assert_array_equal(masks, masks2)
+
+
+def test_availability_trace_round_robin():
+    pol = AvailabilityTrace.round_robin(5, groups=2)
+    m = np.asarray(jax.vmap(pol.mask)(jnp.arange(4)))
+    np.testing.assert_array_equal(m[0], [1, 0, 1, 0, 1])
+    np.testing.assert_array_equal(m[1], [0, 1, 0, 1, 0])
+    np.testing.assert_array_equal(m[0], m[2])     # period 2
+    assert pol.cohort_size == 3
+
+
+def test_fixed_cohort_mask():
+    pol = FixedCohort(4, clients=(1, 3))
+    np.testing.assert_array_equal(np.asarray(pol.mask(jnp.asarray(0))),
+                                  [0, 1, 0, 1])
+    assert pol.cohort_size == 2
+
+
+def test_policies_reject_empty_cohorts():
+    """Satellite guard: a policy can never produce a zero-client round."""
+    with pytest.raises(AssertionError):
+        UniformParticipation(4, frac=0.0)
+    with pytest.raises(AssertionError):
+        FixedCohort(4, clients=())
+    with pytest.raises(AssertionError):
+        AvailabilityTrace(trace=((1.0, 0.0), (0.0, 0.0)))
+    # frac small enough to round to zero still samples one client
+    assert UniformParticipation(5, frac=0.01).cohort_size == 1
+
+
+def test_masked_mean_zero_mask_guard():
+    """The masked-mean denominator is guarded: an (impossible-by-policy)
+    all-zero mask yields a zero update, not NaN."""
+    x = jnp.ones((4, 3))
+    out = np.asarray(masked_mean(x, jnp.zeros((4,))))
+    np.testing.assert_array_equal(out, np.zeros((3,)))
+
+
+def test_uplink_bits_reports_sampled_cohort():
+    cfg = SAFLConfig(sketch=_SK)
+    params = _params0()
+    per_client = uplink_bits_per_round(cfg, params)
+    assert uplink_bits_per_round(cfg, params, cohort_size=3) == 3 * per_client
+    with pytest.raises(AssertionError):
+        uplink_bits_per_round(cfg, params, cohort_size=0)
+
+
+# ---------------------------------------------------------------------------
+# async staleness buffer
+# ---------------------------------------------------------------------------
+
+def test_async_delay_zero_is_synchronous_bitwise():
+    """The satellite pin: a delay=0 buffer reproduces the synchronous scan
+    path bit for bit (params, opt state, loss history)."""
+    cfg, plan, round_fn, fresh = _safl_setup()
+    acfg = AsyncConfig(max_delay=2, delay="zero")
+    arf = make_async_round(cfg, _linear_loss, acfg, plan)
+    afresh = lambda: (_params0(),
+                      init_async_state(cfg, acfg, _params0(), plan, G))
+    key = jax.random.key(5)
+    p1, s1, h1 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=6,
+                          key=key)
+    p2, s2, h2 = run_scan(arf, _LinearSampler(), *afresh(), rounds=6,
+                          key=key, buffer=True)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(s1, s2["opt"])
+    # every round drains its full cohort immediately
+    np.testing.assert_array_equal(h2["arrival_weight"], np.full(6, float(G)))
+
+
+@pytest.mark.parametrize("kind", ["stagger", "uniform"])
+def test_async_scan_matches_host_loop_bitwise(kind):
+    cfg, plan, _, _ = _safl_setup()
+    acfg = AsyncConfig(max_delay=2, delay=kind, staleness_alpha=0.5)
+    arf = make_async_round(cfg, _linear_loss, acfg, plan)
+    afresh = lambda: (_params0(),
+                      init_async_state(cfg, acfg, _params0(), plan, G))
+    key = jax.random.key(5)
+    p1, s1, h1 = run_host_loop(arf, _LinearSampler(), *afresh(), rounds=6,
+                               key=key, buffer=True, donate=False)
+    p2, s2, h2 = run_scan(arf, _LinearSampler(), *afresh(), rounds=6,
+                          key=key, buffer=True, chunk_size=3)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    np.testing.assert_array_equal(h1["arrival_weight"], h2["arrival_weight"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(s1, s2)
+    assert np.isfinite(h2["loss"]).all()
+
+
+def test_async_stale_arrivals_are_discounted():
+    """With delays > 0 the total arrival weight of a full cohort is below G
+    (stale payloads are (1+d)^-alpha-discounted), and early rounds see
+    partial cohorts."""
+    cfg, plan, _, _ = _safl_setup()
+    acfg = AsyncConfig(max_delay=2, delay="stagger", staleness_alpha=0.5)
+    arf = make_async_round(cfg, _linear_loss, acfg, plan)
+    afresh = lambda: (_params0(),
+                      init_async_state(cfg, acfg, _params0(), plan, G))
+    _, _, h = run_scan(arf, _LinearSampler(), *afresh(), rounds=6,
+                       key=jax.random.key(0), buffer=True)
+    w = np.asarray(h["arrival_weight"])
+    assert w[0] < G                       # round 0: delayed clients missing
+    assert (w[2:] < G).all() and (w[2:] > 0).all()   # steady state: discounted
+
+
+def test_async_composes_with_participation():
+    """Cohort sampling gates what enters the buffer; the run stays finite
+    and deterministic across chunk splits."""
+    cfg, plan, _, _ = _safl_setup(clip=True)
+    acfg = AsyncConfig(max_delay=1, delay="uniform")
+    arf = make_async_round(cfg, _linear_loss, acfg, plan)
+    afresh = lambda: (_params0(),
+                      init_async_state(cfg, acfg, _params0(), plan, G))
+    pol = UniformParticipation(G, frac=0.5, seed=1)
+    key = jax.random.key(3)
+    _, s1, h1 = run_scan(arf, _LinearSampler(), *afresh(), rounds=4, key=key,
+                         buffer=True, participation=pol)
+    _, s2, h2 = run_scan(arf, _LinearSampler(), *afresh(), rounds=4, key=key,
+                         buffer=True, participation=pol, chunk_size=2)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(s1, s2)
+    assert np.isfinite(h1["loss"]).all()
+    # arrivals can stack across generations, but each generation contributes
+    # at most cohort_size * (1+d)^-alpha weight
+    bound = pol.cohort_size * sum(
+        (1.0 + d) ** -acfg.staleness_alpha
+        for d in range(acfg.buffer_rounds))
+    assert (np.asarray(h1["arrival_weight"]) <= bound + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# device-side Gaussian classification sampler (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+def _cls_data():
+    return GaussianClsData(ClsDataConfig(num_features=8, num_classes=4,
+                                         num_clients=3, dirichlet_alpha=0.5,
+                                         seed=2))
+
+
+def _cls_loss(params, batch):
+    logits = batch["x"] @ params["W"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def test_gaussian_device_sampler_matches_host_bitwise():
+    smp = _cls_data().device_sampler(batch_per_client=6, local_steps=2)
+    for t in (0, 4):
+        dev, host = smp.round_batch(t), smp.host_round_batch(t)
+        np.testing.assert_array_equal(np.asarray(dev["x"]), host["x"])
+        np.testing.assert_array_equal(np.asarray(dev["y"]), host["y"])
+    assert host["x"].shape == (3, 2, 3, 8)
+    assert host["y"].shape == (3, 2, 3)
+    assert host["y"].min() >= 0 and host["y"].max() < 4
+
+
+def test_gaussian_device_sampler_pure_in_round_seed():
+    smp = _cls_data().device_sampler(batch_per_client=4, local_steps=2)
+    b1 = np.asarray(smp.round_batch(5)["x"])
+    # fresh sampler over the same dataset: identical
+    smp2 = _cls_data().device_sampler(batch_per_client=4, local_steps=2)
+    np.testing.assert_array_equal(b1, np.asarray(smp2.round_batch(5)["x"]))
+    # different round: different draws
+    assert not np.array_equal(b1, np.asarray(smp.round_batch(6)["x"]))
+    # different clients draw different streams
+    assert not np.array_equal(b1[0], b1[1])
+
+
+def test_gaussian_workload_rides_scan_driver_bitwise():
+    """Classification workloads run through run_scan and match the host
+    loop bit for bit -- the protocol contract the bigram sampler pins."""
+    smp = _cls_data().device_sampler(batch_per_client=6, local_steps=2)
+    params0 = {"W": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    cfg = SAFLConfig(sketch=SketchConfig(kind="countsketch", ratio=0.5,
+                                         min_b=4),
+                     server=AdaConfig(name="amsgrad", lr=0.05),
+                     client_lr=0.2, local_steps=2)
+    plan = make_packing_plan(cfg.sketch, params0)
+    round_fn = functools.partial(safl_round, cfg, _cls_loss, plan=plan)
+    fresh = lambda: (jax.tree.map(jnp.copy, params0),
+                     init_safl(cfg, params0))
+    key = jax.random.key(9)
+    p1, s1, h1 = run_host_loop(round_fn, smp, *fresh(), rounds=4, key=key,
+                               donate=False)
+    p2, s2, h2 = run_scan(round_fn, smp, *fresh(), rounds=4, key=key,
+                          chunk_size=2)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    assert np.isfinite(h2["loss"]).all()
