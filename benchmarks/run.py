@@ -12,8 +12,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig5_hessian_spectrum : intrinsic dimension of the loss Hessian (Fig. 5)
   sketch_ops            : raw sk/desk operator throughput (pure-jnp + Pallas)
                           + packed-engine vs per-leaf round-trip comparison
+  mesh rows (--mesh)    : per-round jitted mesh step vs the scanned mesh
+                          driver (scan OUTSIDE shard_map) on the cross_silo
+                          topology; needs 8 forced host devices
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--json]
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--json] [--mesh]
 
 ``--json`` additionally writes BENCH_sketch.json (name -> us_per_call, plus
 ``<name>.final_loss`` convergence keys for the participation/async rows) so
@@ -50,6 +53,11 @@ from repro.models import ModelConfig, init_params, loss_fn
 QUICK = "--quick" in sys.argv
 JSON_OUT = "BENCH_sketch.json" if "--json" in sys.argv else None
 GUARD = "--guard" in sys.argv
+# --mesh: run ONLY the mesh/<algo> rows (needs >= 8 devices, e.g.
+# XLA_FLAGS=--xla_force_host_platform_device_count=8) and MERGE them into an
+# existing BENCH_sketch.json instead of overwriting it -- the flag lives in
+# its own CI step so the forced-device flag never touches the default rows.
+MESH = "--mesh" in sys.argv
 
 _ROWS: dict[str, float] = {}
 
@@ -376,11 +384,101 @@ def packed_vs_perleaf():
           f"speedup={us_perleaf / us_packed_ind:.2f}x")
 
 
+def mesh_rows():
+    """mesh/<algo> (host-driven per-round jitted mesh step) vs
+    mesh/<algo>_scan (R rounds as ONE lax.scan OUTSIDE the shard_map round,
+    donated (params, opt, data_state, key) carries, steady state) on the
+    cross_silo production topology: a (2, 2, 2) pod/data/model mesh, one FL
+    client per pod, FSDP weights, mb data-sharded.  Final losses of the two
+    rows are asserted bitwise-equal (ISSUE 4 acceptance) and pinned into the
+    JSON as <name>.final_loss next to the round times; --guard covers the
+    _scan rows.  cross_silo rather than cross_device because the latter's
+    partial-manual shard_map needs the jax>=0.6 stack (DESIGN §8)."""
+    if jax.device_count() < 8:
+        if GUARD:
+            # never let the guarded CI step go green without its rows: if
+            # the forced-device flag stopped taking effect, fail loudly
+            sys.exit("# --mesh --guard needs >= 8 devices "
+                     f"(have {jax.device_count()}); set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=8")
+        print("# mesh rows skipped: need >= 8 devices (run with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)")
+        return
+    from repro.launch.mesh import _mesh
+    from repro.launch.train import (make_safl_train_step, mesh_sampler,
+                                    run_mesh_host_loop, make_safl_scan_fn)
+    from repro.models.sharding import use_mesh
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    topo = "cross_silo"
+    rounds = 6 if QUICK else 20
+    data = BigramLMData(LMDataConfig(vocab_size=MODEL.vocab_size, seq_len=SEQ,
+                                     num_clients=2, alpha=0.03))
+    key = jax.random.key(1000)
+    with use_mesh(mesh):
+        # batch_per_client 8, not BPC=10: mb = 8/K = 4 divides the 2-way
+        # data axis, so per-round and scanned programs partition identically
+        # (a padded mb would reorder the loss/psum reductions and break the
+        # bitwise pin)
+        smp = mesh_sampler(mesh, data.device_sampler(8, K), topo)
+        for algo, kind in (("safl", "countsketch"), ("fedopt", "none")):
+            cfg = SAFLConfig(
+                sketch=SketchConfig(kind=kind, ratio=0.05, min_b=8),
+                server=AdaConfig(name="amsgrad", lr=0.01),
+                client_lr=0.5, local_steps=K, remat_local=False)
+            step, _ = make_safl_train_step(MODEL, cfg, mesh, topo)
+
+            def fresh():
+                p = init_params(MODEL, jax.random.key(0))
+                return p, init_safl(cfg, p)
+
+            # host-driven per-round reference: cold end to end (compile at
+            # t=0, one dispatch + one blocking loss fetch per round)
+            t0 = time.perf_counter()
+            _, _, h_host = run_mesh_host_loop(step, smp, *fresh(),
+                                              rounds=rounds, key=key)
+            us_host = (time.perf_counter() - t0) / rounds * 1e6
+            final_host = float(h_host["loss"][-1])
+
+            # scanned: one chunk executable, steady state (compile excluded
+            # by a warm-up run; min-of-2 damps noise)
+            chunk, _ = make_safl_scan_fn(MODEL, cfg, mesh, topo, sampler=smp,
+                                         num_rounds=rounds)
+            # key_data(key) aliases key's buffer and the chunk donates it:
+            # hand each run a fresh device copy of the host value
+            kd_host = np.asarray(jax.random.key_data(key))
+
+            def run():
+                p, s = fresh()
+                t0 = time.perf_counter()
+                _, _, _, _, hist = chunk(p, s, smp.init_state(),
+                                         jnp.asarray(kd_host),
+                                         jnp.asarray(0, jnp.int32))
+                losses = np.asarray(hist["loss"])   # one fetch per run
+                return losses, time.perf_counter() - t0
+            run()                                   # compile
+            losses, secs = run()
+            secs = min(secs, run()[1])
+            final_scan = float(losses[-1])
+            us_scan = secs / rounds * 1e6
+
+            assert final_scan == final_host, (
+                f"mesh/{algo}: scanned final loss {final_scan!r} != "
+                f"per-round {final_host!r} (bitwise parity broken)")
+            _emit(f"mesh/{algo}", us_host,
+                  f"final_loss={final_host:.4f};host_per_round;cold_e2e",
+                  final_loss=final_host)
+            _emit(f"mesh/{algo}_scan", us_scan,
+                  f"final_loss={final_scan:.4f};steady_state;parity=bitwise;"
+                  f"host_cold_us={us_host:.0f};"
+                  f"speedup={us_host / us_scan:.2f}x",
+                  final_loss=final_scan)
+
+
 def _guarded_row(name: str) -> bool:
-    """Steady-state scanned rows only: fig1/*_scan plus the participation
-    (_p{frac}) and async-buffer (_async) rows, which also run as one
-    on-device scan with compilation excluded.  The *.final_loss convergence
-    keys are pins, not times -- never guarded."""
+    """Steady-state scanned rows only: fig1/*_scan and mesh/*_scan plus the
+    participation (_p{frac}) and async-buffer (_async) rows, which also run
+    as one on-device scan with compilation excluded.  The *.final_loss
+    convergence keys are pins, not times -- never guarded."""
     if name.endswith(".final_loss"):
         return False
     return (name.endswith("_scan") or name.endswith("_async")
@@ -404,24 +502,38 @@ def _perf_guard(prev: dict[str, float]) -> list[str]:
 
 def main() -> None:
     prev: dict[str, float] = {}
-    if GUARD:
+    if GUARD or JSON_OUT:
         try:
             with open("BENCH_sketch.json") as f:
                 prev = json.load(f)
         except (OSError, json.JSONDecodeError):
-            print("# --guard: no committed BENCH_sketch.json baseline; "
-                  "guard is a no-op")
+            if GUARD:
+                print("# --guard: no committed BENCH_sketch.json baseline; "
+                      "guard is a no-op")
     print("name,us_per_call,derived")
-    table1_comm_bits()
-    fig3_sketch_sizes()
-    fig1_resnet_scratch()
-    fig1_participation()
-    fig2_finetune()
-    fig5_hessian_spectrum()
-    sketch_ops()
+    if MESH:
+        mesh_rows()
+    else:
+        table1_comm_bits()
+        fig3_sketch_sizes()
+        fig1_resnet_scratch()
+        fig1_participation()
+        fig2_finetune()
+        fig5_hessian_spectrum()
+        sketch_ops()
     if JSON_OUT:
+        # the two modes own disjoint row namespaces and each preserves the
+        # other's committed baseline: --mesh merges its mesh/* rows in, the
+        # default run refreshes everything EXCEPT mesh/* (so a default run
+        # cannot delete the mesh baseline the mesh --guard step compares
+        # against)
+        if MESH:
+            out = {**prev, **_ROWS}
+        else:
+            out = {**{k: v for k, v in prev.items()
+                      if k.startswith("mesh/")}, **_ROWS}
         with open(JSON_OUT, "w") as f:
-            json.dump(_ROWS, f, indent=2, sort_keys=True)
+            json.dump(out, f, indent=2, sort_keys=True)
         print(f"# wrote {JSON_OUT} ({len(_ROWS)} rows)")
     if GUARD:
         fails = _perf_guard(prev)

@@ -45,6 +45,12 @@ ap.add_argument("--participation-frac", type=float, default=1.0,
 ap.add_argument("--async-buffer", type=int, default=0, metavar="MAX_DELAY",
                 help="run the FedBuff-style staleness buffer with client "
                 "delays up to MAX_DELAY rounds (0 = synchronous)")
+ap.add_argument("--resume", action="store_true",
+                help="restart from --ckpt's (t, key) cursor and resume the "
+                "EXACT trajectory (pass the same model/algorithm flags): "
+                "every per-round stream is a pure function of the absolute "
+                "round index, so the resumed run is bit-identical to an "
+                "uninterrupted one (tests/test_resume.py)")
 args = ap.parse_args()
 
 if args.big:  # ~100M (paper's BERT scale)
@@ -105,6 +111,18 @@ print(f"{'FedOPT' if args.fedopt else 'SAFL'} on {n/1e6:.1f}M params, "
 
 key = jax.random.key(0)
 
+start_round = 0
+if args.resume:
+    # the `like` tree fixes structure/dtypes, so a checkpoint from different
+    # flags (other model / optimizer / async state) fails loudly here
+    like = {"params": params, "opt": opt,
+            "cursor": {"t": jnp.asarray(0), "key": jax.random.key_data(key)}}
+    state, _step = restore_checkpoint(args.ckpt, like)
+    params, opt = state["params"], state["opt"]
+    key = jax.random.wrap_key_data(state["cursor"]["key"])
+    start_round = int(state["cursor"]["t"])
+    print(f"resuming from {args.ckpt}.npz at round {start_round}")
+
 
 def on_chunk(t_done, p, o, hist):
     print(f"round {t_done - 1:4d}  loss {hist['loss'][-1]:.4f}")
@@ -122,7 +140,7 @@ params, opt, hist = run_scan(
     round_fn, sampler, params, opt, rounds=args.rounds, key=key,
     chunk_size=100, kwargs_fn=lambda t: {"lr_scale": sched(t)},
     on_chunk=on_chunk, participation=participation,
-    buffer=async_cfg is not None)
+    buffer=async_cfg is not None, start_round=start_round)
 save_checkpoint(args.ckpt, {"params": params, "opt": opt,
                             "cursor": {"t": jnp.asarray(args.rounds),
                                        "key": jax.random.key_data(key)}},

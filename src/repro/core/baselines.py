@@ -39,8 +39,8 @@ from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
 from repro.core.packed import (derive_round_params, desk_flat,
                                make_packing_plan, pack_tree, sk_flat,
                                sk_packed_clients, unpack_tree)
-from repro.core.safl import (SAFLConfig, client_delta, masked_mean,
-                             masked_mean_tree, masked_where_tree)
+from repro.core.safl import (SAFLConfig, client_delta, mask_weights,
+                             masked_mean, masked_mean_tree, masked_where_tree)
 from repro.core.sketch import SketchConfig
 
 Pytree = Any
@@ -248,7 +248,8 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
             # unsampled clients never compressed/transmitted: their error
             # memory is untouched this round
             old_flat = jax.vmap(lambda t: pack_tree(plan, t))(state["err"])
-            err_flat = jnp.where(part_mask[:, None] > 0, err_flat, old_flat)
+            sel = mask_weights(part_mask)
+            err_flat = jnp.where(sel[:, None] > 0, err_flat, old_flat)
         err = jax.vmap(lambda f: unpack_tree(plan, f, cast=False))(err_flat)
         update = unpack_tree(plan, masked_mean(comp, part_mask), cast=False)
         params, opt = apply_update(cfg.server, state["opt"], params, update)

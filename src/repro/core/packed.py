@@ -95,6 +95,48 @@ class PackingPlan:
         return all(op.raw for op in self.ops)
 
 
+def shard_local_abstract(tree: Pytree, pspecs: Pytree,
+                         axis_sizes) -> Pytree:
+    """Per-device local shard shapes of ``tree`` under ``pspecs``.
+
+    ``axis_sizes`` maps mesh axis name -> size (``dict(mesh.shape)``).
+    Returns ``ShapeDtypeStruct`` leaves whose dim i is the global dim divided
+    by the product of the mesh axes sharding it -- the leaf shapes a
+    ``shard_map`` body sees.  Every sharded dim must divide evenly (the same
+    precondition shard_map itself enforces)."""
+    def local(leaf, spec):
+        dims = []
+        # a spec may be shorter than the leaf rank (trailing dims implicitly
+        # replicated): pad with None so no dim is silently dropped
+        spec = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        for d, e in zip(leaf.shape, spec):
+            axes = () if e is None else (e if isinstance(e, tuple) else (e,))
+            sz = 1
+            for a in axes:
+                sz *= axis_sizes[a]
+            if d % sz:
+                raise ValueError(
+                    f"dim {d} of {leaf.shape} not divisible by mesh axes "
+                    f"{axes} (size {sz})")
+            dims.append(d // sz)
+        return jax.ShapeDtypeStruct(tuple(dims), leaf.dtype)
+    return jax.tree.map(local, tree, pspecs)
+
+
+def make_sharded_packing_plan(cfg: SketchConfig, tree: Pytree, pspecs: Pytree,
+                              axis_sizes) -> PackingPlan:
+    """PackingPlan over the SHARD-LOCAL slices of ``tree`` (DESIGN §8).
+
+    The mesh round sketches each leaf's local shard inside ``shard_map``
+    (shard-local along the model/FSDP axes -- no all-gather of the d-dim
+    delta), so the packed layout must be computed from the *local* shapes,
+    not the global ones.  Built once outside any trace; per-leaf fold_in
+    tags match the per-leaf reference path in
+    ``launch.train.sharded_sketch_avg_desk`` exactly."""
+    return make_packing_plan(cfg, shard_local_abstract(tree, pspecs,
+                                                       axis_sizes))
+
+
 def make_packing_plan(cfg: SketchConfig, tree: Pytree) -> PackingPlan:
     """Lay out every leaf of ``tree`` into the packed input/payload buffers."""
     flat, treedef = jax.tree_util.tree_flatten(tree)

@@ -56,7 +56,18 @@ def tree_sub(a: Pytree, b: Pytree) -> Pytree:
                                       - y.astype(jnp.float32)), a, b)
 
 
-def masked_mean(x: jax.Array, mask: jax.Array | None) -> jax.Array:
+def mask_weights(mask) -> jax.Array:
+    """The (G,) per-client weight vector of a participation mask.
+
+    Plain (G,) arrays pass through; *weighted* masks -- dicts
+    ``{"w": (G,) weights, "den": static denominator, "n": cohort size}``, as
+    emitted by ``fed.participation.ImportanceParticipation`` -- contribute
+    their weight vector.  A weight of 0 means "not sampled" in both forms.
+    """
+    return mask["w"] if isinstance(mask, dict) else mask
+
+
+def masked_mean(x: jax.Array, mask) -> jax.Array:
     """Mean of ``x`` over its leading (client) axis, restricted to ``mask``.
 
     ``mask`` is a (G,) participation mask (1.0 = sampled).  ``mask=None``
@@ -64,28 +75,38 @@ def masked_mean(x: jax.Array, mask: jax.Array | None) -> jax.Array:
     BITWISE: ``1.0 * x`` is exact, the axis-0 reduction lowers identically,
     and the denominator is the same float G (participation policies
     guarantee >=1 sampled client, so the max() guard never rewrites it).
+
+    A weighted mask (dict form, see ``mask_weights``) computes
+    ``sum(w * x) / den`` with the STATIC denominator the policy supplies --
+    the Horvitz-Thompson form importance sampling needs (dividing by the
+    random weight sum would turn the unbiased estimator into a ratio
+    estimator).
     """
     if mask is None:
         return jnp.mean(x, axis=0)
-    m = mask.reshape(mask.shape + (1,) * (x.ndim - 1)).astype(x.dtype)
-    den = jnp.maximum(jnp.sum(mask), 1.0).astype(x.dtype)
+    w = mask_weights(mask)
+    m = w.reshape(w.shape + (1,) * (x.ndim - 1)).astype(x.dtype)
+    if isinstance(mask, dict):
+        return jnp.sum(x * m, axis=0) / jnp.asarray(mask["den"], x.dtype)
+    den = jnp.maximum(jnp.sum(w), 1.0).astype(x.dtype)
     return jnp.sum(x * m, axis=0) / den
 
 
-def masked_mean_tree(tree: Pytree, mask: jax.Array | None) -> Pytree:
+def masked_mean_tree(tree: Pytree, mask) -> Pytree:
     """``masked_mean`` over every leaf (leaves have leading client axis G)."""
     return jax.tree.map(lambda x: masked_mean(x, mask), tree)
 
 
-def masked_where_tree(mask: jax.Array | None, new: Pytree, old: Pytree) -> Pytree:
+def masked_where_tree(mask, new: Pytree, old: Pytree) -> Pytree:
     """Per-client state select: sampled clients take ``new`` leaves, the rest
     keep ``old`` (leaves (G, ...)).  Used for error-feedback memories under
     partial participation; ``mask=None`` (and, bitwise, an all-ones mask)
-    returns ``new`` unchanged."""
+    returns ``new`` unchanged.  Weighted masks select on ``w > 0``."""
     if mask is None:
         return new
+    w = mask_weights(mask)
     def sel(n, o):
-        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        m = w.reshape(w.shape + (1,) * (n.ndim - 1))
         return jnp.where(m > 0, n, o)
     return jax.tree.map(sel, new, old)
 

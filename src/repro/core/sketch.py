@@ -302,6 +302,33 @@ def desk_leaf(cfg: SketchConfig, key: jax.Array, s: jax.Array, n: int,
     return fn(cfg, key, s, n)
 
 
+SKETCH_CHUNK_NUMEL = 1 << 24    # leaves above this sketch per layer slice
+
+
+def sk_leaf_stacked(cfg: SketchConfig, key: jax.Array,
+                    rows: jax.Array) -> jax.Array:
+    """sk each row of ``rows`` (L, n) with the per-row operator
+    ``fold_in(key, j)`` -- the layer-wise chunked path for leaves whose flat
+    size would make one hash/sign temporary too large.  ``lax.map`` bounds
+    the temporaries to one row's worth and realizes the layer-wise sketching
+    the paper's conclusion proposes (shared by the mesh round's per-leaf
+    reference path in ``launch.train``)."""
+    def sk_one(args):
+        j, v = args
+        return sk_leaf(cfg, jax.random.fold_in(key, j), v)
+    return jax.lax.map(sk_one, (jnp.arange(rows.shape[0]), rows))
+
+
+def desk_leaf_stacked(cfg: SketchConfig, key: jax.Array, s: jax.Array,
+                      n: int) -> jax.Array:
+    """Row-wise desk of ``s`` (L, b) back to (L, n): the adjoint of
+    ``sk_leaf_stacked`` under the same per-row ``fold_in(key, j)`` chain."""
+    def desk_one(args):
+        j, sj = args
+        return desk_leaf(cfg, jax.random.fold_in(key, j), sj, n)
+    return jax.lax.map(desk_one, (jnp.arange(s.shape[0]), s))
+
+
 # ---------------------------------------------------------------------------
 # Pytree-level sketching
 # ---------------------------------------------------------------------------

@@ -134,6 +134,38 @@ class DeviceBigramSampler:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardedSampler:
+    """Mesh adapter for the ``init_state()/sample(state, t)`` protocol.
+
+    Delegates to ``base`` and lands the sampled ``(G, K, mb, ...)`` batch on
+    the production mesh via a sharding constraint (G over the client axes,
+    mb over ``data`` in cross_silo -- see ``launch.train.batch_pspecs``).
+    The constraint is pure layout: the tokens are bitwise those of ``base``,
+    so mesh trajectories stay comparable to the single-host driver's, and
+    GSPMD partitions the per-client sampling computation along the client
+    axes instead of materializing the full batch per device.
+
+    Build via ``launch.train.mesh_sampler`` (which derives the shardings
+    from the batch's eval_shape); this class stays mesh-agnostic.
+    """
+    base: Any
+    shardings: Any                 # pytree of NamedSharding over the batch
+
+    def init_state(self) -> Pytree:
+        return self.base.init_state()
+
+    def sample(self, state: Pytree, t: jax.Array) -> tuple[Pytree, Pytree]:
+        state, batch = self.base.sample(state, t)
+        return state, jax.lax.with_sharding_constraint(batch, self.shardings)
+
+    def round_batch(self, t) -> Pytree:
+        return self.base.round_batch(t)
+
+    def host_round_batch(self, t: int) -> Pytree:
+        return self.base.host_round_batch(t)
+
+
+@dataclasses.dataclass(frozen=True)
 class DeviceGaussianClsSampler:
     """Pure-jnp Gaussian-mixture classification sampler for the scan driver.
 

@@ -5,5 +5,7 @@ buffers, and sampling policies for the on-device scan driver (DESIGN.md §7).
 from repro.fed.async_buffer import (AsyncConfig, init_async_state,
                                     make_async_round)
 from repro.fed.participation import (AvailabilityTrace, FixedCohort,
-                                     FullParticipation, UniformParticipation,
-                                     masked_mean, masked_mean_tree)
+                                     FullParticipation,
+                                     ImportanceParticipation,
+                                     UniformParticipation, masked_mean,
+                                     masked_mean_tree, round_variates)

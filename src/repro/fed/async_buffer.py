@@ -157,6 +157,11 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
 
         deltas, losses = jax.vmap(one_client)(batch)
         G = jax.tree.leaves(deltas)[0].shape[0]
+        if isinstance(part_mask, dict):
+            raise TypeError(
+                "the async staleness buffer stores 0/1 cohort masks per "
+                "generation; weighted (importance-sampling) masks are not "
+                "supported -- use a 0/1 participation policy")
         mask = jnp.ones((G,), jnp.float32) if part_mask is None else part_mask
 
         # -- push: generation t's payloads claim slot t % D (its previous

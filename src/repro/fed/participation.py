@@ -27,6 +27,12 @@ In simulation all G clients still *compute* (static shapes under vmap/scan);
 the mask governs what the server aggregates -- standard FL-simulation
 semantics (unsampled work is discarded, matching a real deployment where it
 was never run).
+
+Two mask forms exist: plain ``(num_clients,)`` 0/1 arrays (cohort mean
+divides by the sampled count), and the *weighted* dict form
+``{"w", "den", "n"}`` emitted by ``ImportanceParticipation`` (Horvitz-
+Thompson numerator weights with a static denominator; see
+``core.safl.masked_mean``).
 """
 
 from __future__ import annotations
@@ -40,6 +46,18 @@ import numpy as np
 # re-exported for convenience: the aggregation helpers live in core so the
 # round families can use them without importing repro.fed
 from repro.core.safl import masked_mean, masked_mean_tree  # noqa: F401
+
+
+def round_variates(num_clients: int, seed: int, t) -> jax.Array:
+    """Per-(round, client) uniforms shared by the randomized policies.
+
+    ``u_c = uniform(fold_in(fold_in(key(seed), t), c))`` -- a pure function
+    of ``(t, c, seed)``; in particular client c's variate is independent of
+    how many other clients exist (the same stream discipline the device data
+    sampler uses), which tests/test_properties.py pins."""
+    key_t = jax.random.fold_in(jax.random.key(seed), t)
+    return jax.vmap(lambda c: jax.random.uniform(
+        jax.random.fold_in(key_t, c)))(jnp.arange(num_clients))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,13 +82,104 @@ class UniformParticipation:
     def cohort_size(self) -> int:
         return max(1, int(round(self.frac * self.num_clients)))
 
+    def variates(self, t: jax.Array) -> jax.Array:
+        """The policy's per-client round-t uniforms (``round_variates``)."""
+        return round_variates(self.num_clients, self.seed, t)
+
     def mask(self, t: jax.Array) -> jax.Array:
-        key_t = jax.random.fold_in(jax.random.key(self.seed), t)
-        u = jax.vmap(lambda c: jax.random.uniform(
-            jax.random.fold_in(key_t, c)))(jnp.arange(self.num_clients))
-        order = jnp.argsort(u)
+        order = jnp.argsort(self.variates(t))
         return jnp.zeros((self.num_clients,), jnp.float32).at[
             order[:self.cohort_size]].set(1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ImportanceParticipation:
+    """Non-uniform client sampling with 1/(N p_c) importance reweighting.
+
+    Sampling is the exponential race (Efraimidis--Spirakis weighted sampling
+    without replacement): the round-t cohort is the m smallest keys
+    ``z_c = -log1p(-u_c) / (N p_c)`` over the SAME per-(round, client)
+    uniforms ``u_c`` that ``UniformParticipation`` draws.  A larger ``p_c``
+    shrinks client c's key, so it is sampled more often; at m = 1 the
+    inclusion probability is exactly ``p_c``.
+
+    The emitted mask is the *weighted* form consumed by
+    ``core.safl.masked_mean``:
+
+        ``{"w": 1{c in S} / (N p_c), "den": m, "n": m}``
+
+    i.e. the Horvitz-Thompson estimator ``sum_{c in S} x_c / (N p_c m)``
+    with the static denominator m (NOT the random weight sum -- that would
+    be a biased ratio estimator).  It is unbiased under the Poisson
+    approximation ``pi_c ~= m p_c`` (exact at m = 1 and under uniform
+    probabilities, where every weight is exactly 1.0) and corrects the
+    systematic under-representation of low-probability clients that the
+    unweighted cohort mean suffers (tests/test_fed.py measures both).
+
+    Validity regime: the approximation needs ``m * max(p_c) <= 1`` --
+    beyond it an inclusion probability would have to exceed 1, it
+    saturates instead, and the 1/(N p_c) weights turn the estimator
+    SEVERELY biased (worse than the unweighted mean).  The constructor
+    rejects such configurations; shrink ``frac`` or flatten ``probs``.
+
+    Uniform probabilities are detected statically: the tilt is then the
+    identity (``z = u``) and all weights are exactly 1.0, so the trajectory
+    is pinned BITWISE to ``UniformParticipation`` with the same
+    (frac, seed) -- masked_mean's numerator multiplies by exactly 1.0 and
+    its static denominator equals the float cohort size the 0/1 path sums.
+    """
+    num_clients: int
+    probs: tuple[float, ...]    # per-client sampling distribution (sums to 1)
+    frac: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.num_clients >= 1
+        assert len(self.probs) == self.num_clients, \
+            f"need {self.num_clients} probs, got {len(self.probs)}"
+        assert all(p > 0.0 for p in self.probs), "probs must be positive"
+        assert abs(sum(self.probs) - 1.0) < 1e-6, "probs must sum to 1"
+        assert 0.0 < self.frac <= 1.0, f"frac {self.frac} not in (0, 1]"
+        assert self.cohort_size >= 1, "policy must sample >=1 client"
+        assert self.cohort_size * max(self.probs) <= 1.0 + 1e-9, (
+            f"cohort {self.cohort_size} x max prob {max(self.probs)} > 1: "
+            "the pi_c ~= m p_c inclusion approximation saturates and the "
+            "1/(N p_c) reweighting becomes severely biased -- shrink frac "
+            "or flatten probs")
+
+    @property
+    def cohort_size(self) -> int:
+        return max(1, int(round(self.frac * self.num_clients)))
+
+    @property
+    def uniform(self) -> bool:
+        """Statically-detected uniform distribution: identity tilt, unit
+        weights (the bitwise pin to UniformParticipation)."""
+        return len(set(self.probs)) == 1
+
+    def variates(self, t: jax.Array) -> jax.Array:
+        """The policy's per-client round-t uniforms (``round_variates``) --
+        the same stream ``UniformParticipation`` with this seed draws."""
+        return round_variates(self.num_clients, self.seed, t)
+
+    def _np_rates(self) -> np.ndarray:
+        return (self.num_clients
+                * np.asarray(self.probs, np.float64)).astype(np.float32)
+
+    def mask(self, t: jax.Array) -> dict:
+        u = self.variates(t)
+        if self.uniform:
+            z = u                       # identity tilt: exact bitwise pin
+            w = jnp.ones((self.num_clients,), jnp.float32)
+        else:
+            z = -jnp.log1p(-u) / jnp.asarray(self._np_rates())
+            w = jnp.asarray((1.0 / self._np_rates().astype(np.float64))
+                            .astype(np.float32))
+        m = self.cohort_size
+        order = jnp.argsort(z)
+        sel = jnp.zeros((self.num_clients,), jnp.float32).at[
+            order[:m]].set(1.0)
+        return {"w": sel * w, "den": float(m), "n": m}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -59,12 +59,13 @@ def _with_bits(metrics: dict, bits_per_round: Optional[int],
     """Stack the per-round uplink payload next to the loss (f32: 32d bits of
     a 100M-param model overflows int32).  With a participation mask the
     honest per-round figure is per-client bits x the sampled cohort size,
-    not x N."""
+    not x N (weighted masks carry their static cohort size as ``"n"``)."""
     if bits_per_round is None or "uplink_bits" in metrics:
         return metrics
     bits = jnp.asarray(bits_per_round, jnp.float32)
     if mask is not None:
-        bits = bits * jnp.sum(mask)
+        n = mask["n"] if isinstance(mask, dict) else jnp.sum(mask)
+        bits = bits * n
     return {**metrics, "uplink_bits": bits}
 
 
@@ -116,7 +117,8 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
              rounds: int, key: jax.Array, chunk_size: int = 0,
              kwargs_fn=None, bits_per_round: Optional[int] = None,
              donate: bool = True, on_chunk=None, participation=None,
-             buffer: bool = False) -> tuple[Pytree, dict, dict]:
+             buffer: bool = False,
+             start_round: int = 0) -> tuple[Pytree, dict, dict]:
     """Run ``rounds`` federated rounds on device in scanned chunks.
 
     * ``sampler`` provides ``init_state()`` and ``sample(state, t)`` (see
@@ -129,15 +131,22 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     * ``participation``/``buffer`` are the repro.fed hooks (module
       docstring): the cohort mask is a pure function of the absolute round
       index, so chunk splits leave trajectories bit-identical.
+    * ``start_round`` resumes mid-trajectory at an absolute round index --
+      the restart path for a ``(t, key)`` checkpoint cursor
+      (examples/train_lm.py).  Because every per-round stream (data,
+      cohorts, delays, sketch operators) is a pure function of the absolute
+      round index under ``key``, a resumed run replays the uninterrupted
+      trajectory bit-identically (tests/test_resume.py).
 
     Returns ``(params, state, history)`` with ``history`` a dict of
-    host-side ``(rounds,)`` arrays (``loss``, optionally ``uplink_bits``).
+    host-side ``(rounds - start_round,)`` arrays (``loss``, optionally
+    ``uplink_bits``).
     """
     chunk_size = int(chunk_size) or int(rounds)
     data_state = sampler.init_state()
     compiled: dict[int, Callable] = {}
     hists = []
-    t = 0
+    t = int(start_round)
     while t < rounds:
         n = min(chunk_size, rounds - t)
         if n not in compiled:       # tail chunk of a different length re-jits
@@ -152,6 +161,8 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
         t += n
         if on_chunk is not None:
             on_chunk(t, params, state, hist)
+    if not hists:       # resumed at start_round == rounds: nothing to run
+        return params, state, {}
     history = jax.tree.map(lambda *xs: np.concatenate(xs), *hists)
     return params, state, history
 
@@ -160,7 +171,7 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
                   rounds: int, key: jax.Array, kwargs_fn=None,
                   bits_per_round: Optional[int] = None, donate: bool = True,
                   participation=None, buffer: bool = False,
-                  ) -> tuple[Pytree, dict, dict]:
+                  start_round: int = 0) -> tuple[Pytree, dict, dict]:
     """One-dispatch-per-round reference loop with the scan driver's exact
     key/batch sequence (fold_in(key, t); device-side sampling), including
     the participation/buffer hooks (module docstring).
@@ -174,7 +185,7 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     sample = jax.jit(sampler.sample)
     step = jax.jit(round_fn, donate_argnums=(0, 1) if donate else ())
     hists = []
-    for t in range(rounds):
+    for t in range(int(start_round), rounds):
         tt = jnp.asarray(t, jnp.int32)
         data_state, batch = sample(data_state, tt)
         kw, mask = _round_kwargs(tt, key, kwargs_fn, participation, buffer)

@@ -6,6 +6,14 @@ inside a shard_map (so sketching is shard-local along the model axis -- no
 all-gather of the d-dim delta ever happens).  The FedOpt baseline step
 transmits raw deltas (an O(d) all-reduce) for roofline comparison.
 
+Two drivers share one round core (DESIGN §8): the per-round jitted step
+(``make_safl_train_step``; one host dispatch per round) and the scanned
+multi-round driver (``make_safl_scan_fn`` / ``run_mesh_scan``; R rounds as
+one ``lax.scan`` OUTSIDE the shard_map with donated
+``(params, opt_state, data_state, key)`` carries, device-side sharded batch
+sampling via ``mesh_sampler``, and chunked on-device loss history).  Both
+are bit-identical per round (tests/test_mesh_scan.py).
+
 Run as a module for a real (CPU-scale) training run:
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke
 """
@@ -17,12 +25,17 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
+from repro.core.packed import (PackingPlan, derive_round_params, desk_flat,
+                               make_sharded_packing_plan, pack_tree, sk_flat,
+                               unpack_tree)
 from repro.core.safl import SAFLConfig, client_delta
-from repro.core.sketch import SketchConfig, desk_leaf, sk_leaf
+from repro.core.sketch import (SKETCH_CHUNK_NUMEL, SketchConfig, desk_leaf,
+                               desk_leaf_stacked, sk_leaf, sk_leaf_stacked)
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, forward, loss_fn, param_shapes
 from repro.models.sharding import param_pspecs
@@ -85,18 +98,22 @@ def num_clients_of(mesh, topology: str) -> int:
 # shard-local sketch -> b-dim psum -> desk  (the compressed uplink)
 # ---------------------------------------------------------------------------
 
-_SKETCH_CHUNK_NUMEL = 1 << 24   # leaves above this sketch per layer-slice
+_SKETCH_CHUNK_NUMEL = SKETCH_CHUNK_NUMEL   # back-compat alias
 
 
 def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key):
-    """Runs PER DEVICE inside shard_map.  deltas leaves: (G_loc, *local_shard).
-    Every cross-client collective in SAFL is the pmean below -- b floats per
-    tensor, not d.
+    """Per-leaf REFERENCE path, PER DEVICE inside shard_map.  deltas leaves:
+    (G_loc, *local_shard).  Every cross-client collective in SAFL is the
+    pmean below -- b floats per tensor, not d.
 
-    Leaves whose local shard exceeds _SKETCH_CHUNK_NUMEL are sketched per
+    Leaves whose local shard exceeds SKETCH_CHUNK_NUMEL are sketched per
     slice of their leading (layer-stack) axis via lax.map: this bounds the
     hash/sign temporaries to one layer's worth and realizes the layer-wise
-    sketching the paper's conclusion proposes."""
+    sketching the paper's conclusion proposes.
+
+    This is the ``plan=None`` fallback; the production route is the packed
+    plan path below (same per-leaf fold_in chain, no per-round Python tree
+    traversal), pinned bitwise equal by tests/test_mesh_scan.py."""
     leaves, treedef = jax.tree_util.tree_flatten(deltas)
     out = []
     for i, leaf in enumerate(leaves):
@@ -106,23 +123,12 @@ def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key):
         for d in lshape:
             numel *= d
         n0 = lshape[0] if lshape else 1
-        if numel > _SKETCH_CHUNK_NUMEL and len(lshape) >= 2 and n0 > 1:
+        if numel > SKETCH_CHUNK_NUMEL and len(lshape) >= 2 and n0 > 1:
             vs = leaf.reshape(n0, numel // n0).astype(jnp.float32)
-
-            def sk_one(args):
-                j, v = args
-                return sk_leaf(skcfg, jax.random.fold_in(lk, j), v)
-
-            s = jax.lax.map(sk_one, (jnp.arange(n0), vs))     # (n0, b_sub)
+            s = sk_leaf_stacked(skcfg, lk, vs)                # (n0, b_sub)
             if client_axes:
                 s = jax.lax.pmean(s, client_axes)  # <-- compressed uplink
-
-            def desk_one(args):
-                j, sj = args
-                return desk_leaf(skcfg, jax.random.fold_in(lk, j), sj,
-                                 numel // n0)
-
-            u = jax.lax.map(desk_one, (jnp.arange(n0), s))
+            u = desk_leaf_stacked(skcfg, lk, s, numel // n0)
             out.append(u.reshape(leaf.shape))
             continue
         v = leaf.reshape(-1).astype(jnp.float32)
@@ -134,21 +140,51 @@ def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
+                                  key):
+    """Plan-routed shard-local sketch, PER DEVICE inside shard_map.
+
+    The static layout (``plan``, built once OUTSIDE the trace from the
+    shard-local leaf shapes) replaces the per-leaf Python loop: the round's
+    operator is derived ONCE (shared by sk and desk, per-leaf fold_in tags
+    identical to the reference path), each local client row is packed into
+    one contiguous buffer and compressed in one fused pass, and the pmean
+    moves ONE (G_loc, b_total) payload.  Being trace-free state -- only the
+    round key is traced -- this is what lets the multi-round scan carry the
+    sketch path with zero per-round host work (DESIGN §8)."""
+    rp = derive_round_params(plan, key)
+    flat = jax.vmap(lambda t: pack_tree(plan, t))(deltas)   # (G_loc, d_loc)
+    s = jax.vmap(lambda f: sk_flat(plan, rp, f))(flat)      # (G_loc, b_tot)
+    if client_axes:
+        s = jax.lax.pmean(s, client_axes)          # <-- compressed uplink
+    u = jax.vmap(lambda p: desk_flat(plan, rp, p))(s)
+    return jax.vmap(lambda f: unpack_tree(plan, f, cast=False))(u)
+
+
 def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
-                            topology: str = "cross_device"):
+                            topology: str = "cross_device", plan=None):
     """Sketch each client delta (shard-local), pmean over client axes,
     desketch.
 
     deltas leaves: (G, *param_shape), G sharded over the client axes; param
     dims sharded per ``pspecs``.  Returns the update tree with param
-    sharding."""
+    sharding.  ``plan`` (optional) is the shard-local ``PackingPlan`` from
+    ``core.packed.make_sharded_packing_plan``: when given, leaf sketching
+    runs through the fused packed engine (one dispatch, operator derived
+    once); ``plan=None`` keeps the per-leaf reference loop.  Both produce
+    identical values for shards below the layer-chunk threshold
+    (tests/test_mesh_scan.py pins this bitwise)."""
     client_axes = client_axes_of(mesh, topology)
     lead = client_axes if client_axes else None
     in_specs = jax.tree.map(
         lambda ps: P(*((lead,) + tuple(ps))), pspecs,
         is_leaf=lambda x: isinstance(x, P))
     out_specs = pspecs
-    fn = functools.partial(_sketch_avg_desk_local, skcfg, client_axes)
+    if plan is not None:
+        fn = functools.partial(_sketch_avg_desk_local_packed, plan,
+                               client_axes)
+    else:
+        fn = functools.partial(_sketch_avg_desk_local, skcfg, client_axes)
 
     def local(d, k):
         upd = fn(d, k)
@@ -213,10 +249,7 @@ def client_deltas_sharded(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                      axis_names=set(caxes), check_vma=False)(params, batch)
 
 
-def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
-                         topology: str = "cross_device"):
-    """SAFL round on the mesh.  batch leaves: (G, K, mb, ...) with G = number
-    of FL clients (data-parallel groups or pods, per ``topology``)."""
+def _mesh_pspecs(model_cfg: ModelConfig, topology: str):
     abstract = jax.eval_shape(
         lambda: jax.tree.map(lambda s: jnp.zeros(s, model_cfg.dtype),
                              param_shapes(model_cfg),
@@ -227,9 +260,35 @@ def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                               is_leaf=lambda x: isinstance(x, P))
     else:
         pspecs = param_pspecs(abstract, fsdp=(topology == "cross_silo"))
+    return abstract, pspecs
 
-    def step(params, opt_state, batch, key_data):
-        key = jax.random.wrap_key_data(key_data)
+
+def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+                     topology: str = "cross_device"):
+    """The typed-key SAFL mesh round:
+    ``core(params, opt_state, batch, round_key) -> (params, opt_state,
+    loss)``.
+
+    The shard-local ``PackingPlan`` is built HERE, once, outside any trace
+    (``core.packed.make_sharded_packing_plan``), so only the round operator
+    (``derive_round_params``) depends on the round key -- the sketch path is
+    trace-free state a multi-round ``lax.scan`` can thread through its
+    carry.  Models with a local shard above ``SKETCH_CHUNK_NUMEL`` keep the
+    per-leaf reference path instead (``plan=None``): its layer-chunked
+    lax.map bounds the operator temporaries to one layer slice, which the
+    whole-leaf packed route would not.  ``make_safl_train_step`` wraps this
+    with the key_data calling convention; ``make_safl_scan_fn`` scans it."""
+    from repro.core.packed import shard_local_abstract
+    abstract, pspecs = _mesh_pspecs(model_cfg, topology)
+    plan = None
+    if safl_cfg.sketch.kind != "none":
+        local_abs = shard_local_abstract(abstract, pspecs, dict(mesh.shape))
+        if all(int(np.prod(l.shape)) <= SKETCH_CHUNK_NUMEL
+               for l in jax.tree.leaves(local_abs)):
+            plan = make_sharded_packing_plan(safl_cfg.sketch, abstract,
+                                             pspecs, dict(mesh.shape))
+
+    def core(params, opt_state, batch, key):
         eta = jnp.asarray(safl_cfg.client_lr, jnp.float32)
         deltas, losses = client_deltas_sharded(
             model_cfg, safl_cfg, mesh, topology, params, batch, eta)
@@ -238,23 +297,174 @@ def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
             update = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
         else:
             update = sharded_sketch_avg_desk(
-                mesh, safl_cfg.sketch, pspecs, deltas, key, topology)
+                mesh, safl_cfg.sketch, pspecs, deltas, key, topology,
+                plan=plan)
         params, opt_state = apply_update(
             safl_cfg.server, opt_state, params, update)
         return params, opt_state, jnp.mean(losses)
 
+    return core, pspecs
+
+
+def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+                         topology: str = "cross_device"):
+    """SAFL round on the mesh.  batch leaves: (G, K, mb, ...) with G = number
+    of FL clients (data-parallel groups or pods, per ``topology``)."""
+    core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology)
+
+    def step(params, opt_state, batch, key_data):
+        return core(params, opt_state, batch,
+                    jax.random.wrap_key_data(key_data))
+
     return step, pspecs
+
+
+def _fedopt_cfg(safl_cfg: SAFLConfig) -> SAFLConfig:
+    return SAFLConfig(sketch=SketchConfig(kind="none"),
+                      server=safl_cfg.server,
+                      client_lr=safl_cfg.client_lr,
+                      local_steps=safl_cfg.local_steps,
+                      remat_local=safl_cfg.remat_local)
 
 
 def make_fedopt_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                            topology: str = "cross_device"):
     """Uncompressed FedOPT baseline: raw-delta mean = O(d) all-reduce."""
-    cfg2 = SAFLConfig(sketch=SketchConfig(kind="none"),
-                      server=safl_cfg.server,
-                      client_lr=safl_cfg.client_lr,
-                      local_steps=safl_cfg.local_steps,
-                      remat_local=safl_cfg.remat_local)
-    return make_safl_train_step(model_cfg, cfg2, mesh, topology)
+    return make_safl_train_step(model_cfg, _fedopt_cfg(safl_cfg), mesh,
+                                topology)
+
+
+# ---------------------------------------------------------------------------
+# multi-pod scanned mesh driver: scan OUTSIDE the shard_map round (DESIGN §8)
+# ---------------------------------------------------------------------------
+
+def mesh_sampler(mesh, sampler, topology: str = "cross_device"):
+    """Wrap a device sampler (``init_state()/sample(state, t)``) so its
+    ``(G, K, mb, ...)`` batches land sharded on the mesh per
+    ``batch_pspecs`` -- G over the client axes, mb over ``data`` in
+    cross_silo.  The constraint is pure layout (tokens bitwise unchanged),
+    so mesh and single-host trajectories stay comparable."""
+    from repro.data.device import ShardedSampler
+    st = jax.eval_shape(sampler.init_state)
+    babs = jax.eval_shape(sampler.sample, st,
+                          jax.ShapeDtypeStruct((), jnp.int32))[1]
+    shardings = to_shardings(mesh, batch_pspecs(babs, mesh, topology))
+    return ShardedSampler(sampler, shardings)
+
+
+def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+                      topology: str = "cross_device", *, sampler,
+                      num_rounds: int, donate: bool = True):
+    """Jit ``num_rounds`` SAFL mesh rounds as ONE ``lax.scan`` dispatch.
+
+    The scan sits OUTSIDE the shard_map round: each scanned step draws its
+    batch on device (``sampler.sample(data_state, t)``, sharded via
+    ``mesh_sampler``), derives the round key as ``fold_in(key, t)`` inside
+    the scan body, and runs the same round core the per-round jitted step
+    uses -- so scanned and per-round mesh trajectories are bit-identical
+    (tests/test_mesh_scan.py).  The ``(params, opt_state, data_state, key)``
+    carry is DONATED: large models update in place across chunks, and the
+    host pays one dispatch + one metric fetch per chunk instead of per
+    round.
+
+    Signature of the returned fn:
+        ``(params, opt_state, data_state, key_data, t0) ->
+           (params, opt_state, data_state, key_data, hist)``
+    ``t0`` is a traced scalar so successive chunks of one length share one
+    executable; ``hist["loss"]`` is the chunk's on-device loss history.
+    Returns ``(chunk_fn, pspecs)``.
+    """
+    core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology)
+
+    def chunk(params, opt_state, data_state, key_data, t0):
+        def body(carry, t):
+            params, opt_state, dstate, kd = carry
+            dstate, batch = sampler.sample(dstate, t)
+            rk = jax.random.fold_in(jax.random.wrap_key_data(kd), t)
+            params, opt_state, loss = core(params, opt_state, batch, rk)
+            return (params, opt_state, dstate, kd), {"loss": loss}
+
+        (params, opt_state, data_state, key_data), hist = jax.lax.scan(
+            body, (params, opt_state, data_state, key_data),
+            t0 + jnp.arange(num_rounds, dtype=jnp.int32))
+        return params, opt_state, data_state, key_data, hist
+
+    return (jax.jit(chunk, donate_argnums=(0, 1, 2, 3) if donate else ()),
+            pspecs)
+
+
+def make_fedopt_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+                        topology: str = "cross_device", *, sampler,
+                        num_rounds: int, donate: bool = True):
+    """Scanned uncompressed FedOPT mesh rounds (``sketch.kind == "none"``:
+    the raw-delta O(d) all-reduce inside the same scan layout)."""
+    return make_safl_scan_fn(model_cfg, _fedopt_cfg(safl_cfg), mesh,
+                             topology, sampler=sampler,
+                             num_rounds=num_rounds, donate=donate)
+
+
+def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
+                  params, opt_state, *, rounds: int, key,
+                  topology: str = "cross_device", chunk_size: int = 0,
+                  start_round: int = 0, donate: bool = True, on_chunk=None):
+    """Run ``rounds`` mesh rounds in scanned chunks (the multi-pod analogue
+    of ``launch.driver.run_scan``).
+
+    ``chunk_size`` bounds rounds per dispatch (0 = all in one); metrics
+    cross to the host once per chunk and ``on_chunk(t_done, params,
+    opt_state, chunk_hist)`` runs between chunks.  ``start_round`` resumes a
+    ``(t, key)`` checkpoint cursor mid-trajectory (every per-round stream is
+    a pure function of the absolute round index under ``key``).  Returns
+    ``(params, opt_state, history)`` with host-side
+    ``(rounds - start_round,)`` arrays."""
+    chunk_size = int(chunk_size) or int(rounds)
+    data_state = sampler.init_state()
+    # host copy of the (invariant) base key: the donated key carry comes
+    # back as a pass-through output of its own donated buffer, so each chunk
+    # gets a fresh device copy instead of rethreading a deleted array
+    kd_host = np.asarray(jax.random.key_data(key))
+    compiled: dict[int, Callable] = {}
+    hists = []
+    t = int(start_round)
+    while t < rounds:
+        n = min(chunk_size, rounds - t)
+        if n not in compiled:   # tail chunk of a different length re-jits
+            compiled[n], _ = make_safl_scan_fn(
+                model_cfg, safl_cfg, mesh, topology, sampler=sampler,
+                num_rounds=n, donate=donate)
+        params, opt_state, data_state, _, hist = compiled[n](
+            params, opt_state, data_state, jnp.asarray(kd_host),
+            jnp.asarray(t, jnp.int32))
+        hist = jax.tree.map(np.asarray, hist)      # ONE fetch per chunk
+        hists.append(hist)
+        t += n
+        if on_chunk is not None:
+            on_chunk(t, params, opt_state, hist)
+    if not hists:       # resumed at start_round == rounds: nothing to run
+        return params, opt_state, {}
+    history = jax.tree.map(lambda *xs: np.concatenate(xs), *hists)
+    return params, opt_state, history
+
+
+def run_mesh_host_loop(step, sampler, params, opt_state, *, rounds: int, key,
+                       start_round: int = 0, donate: bool = True):
+    """One-jitted-dispatch-per-round mesh reference with the scanned
+    driver's EXACT key/batch sequence: round t consumes
+    ``key_data(fold_in(key, t))`` and ``sampler.sample(state, t)``.
+    ``step`` is the per-round fn from ``make_safl_train_step`` /
+    ``make_fedopt_train_step``.  benchmarks/run.py times this against
+    ``run_mesh_scan`` (mesh/<algo> vs mesh/<algo>_scan); the trajectories
+    agree bitwise."""
+    data_state = sampler.init_state()
+    sample = jax.jit(sampler.sample)
+    jstep = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    losses = []
+    for t in range(int(start_round), rounds):
+        data_state, batch = sample(data_state, jnp.asarray(t, jnp.int32))
+        kd = jax.random.key_data(jax.random.fold_in(key, t))
+        params, opt_state, loss = jstep(params, opt_state, batch, kd)
+        losses.append(np.asarray(loss))            # blocks every round
+    return params, opt_state, {"loss": np.stack(losses)}
 
 
 def make_prefill_step(model_cfg: ModelConfig):

@@ -372,3 +372,132 @@ def test_gaussian_workload_rides_scan_driver_bitwise():
     np.testing.assert_array_equal(h1["loss"], h2["loss"])
     _assert_trees_equal(p1, p2)
     assert np.isfinite(h2["loss"]).all()
+
+
+# ---------------------------------------------------------------------------
+# importance-weighted sampling (ISSUE 4 satellite, ROADMAP follow-on)
+# ---------------------------------------------------------------------------
+
+def test_importance_uniform_probs_pins_to_uniform_policy_bitwise():
+    """Uniform probabilities are the identity tilt with unit weights: a full
+    scanned SAFL run under ImportanceParticipation reproduces the existing
+    UniformParticipation trajectory bit for bit."""
+    from repro.fed import ImportanceParticipation
+    _, _, round_fn, fresh = _safl_setup()
+    key = jax.random.key(9)
+    uni = UniformParticipation(G, frac=0.5, seed=17)
+    imp = ImportanceParticipation(G, probs=(0.25,) * G, frac=0.5, seed=17)
+    assert imp.uniform and imp.cohort_size == uni.cohort_size
+    p1, s1, h1 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key, participation=uni, bits_per_round=64)
+    p2, s2, h2 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key, participation=imp, bits_per_round=64)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    np.testing.assert_array_equal(h1["uplink_bits"], h2["uplink_bits"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(s1, s2)
+
+
+def test_importance_rejects_saturated_inclusion_regime():
+    """m * max(p) > 1 means an inclusion probability would exceed 1; the
+    pi_c ~= m p_c weights are then severely biased, so the constructor must
+    reject the configuration loudly."""
+    from repro.fed import ImportanceParticipation
+    with pytest.raises(AssertionError, match="biased"):
+        ImportanceParticipation(4, probs=(0.7, 0.1, 0.1, 0.1), frac=0.5)
+    # m = 1 is always valid, whatever the skew
+    ImportanceParticipation(4, probs=(0.7, 0.1, 0.1, 0.1), frac=0.25)
+
+
+def test_importance_mask_weights_are_inverse_probability():
+    """Sampled clients carry exactly 1/(N p_c); the rest carry 0; the static
+    denominator and cohort count are the cohort size m."""
+    from repro.fed import ImportanceParticipation
+    probs = (0.4, 0.3, 0.2, 0.1)
+    pol = ImportanceParticipation(4, probs=probs, frac=0.5, seed=5)
+    for t in range(6):
+        m = pol.mask(jnp.asarray(t, jnp.int32))
+        w = np.asarray(m["w"])
+        sel = w > 0
+        assert sel.sum() == pol.cohort_size == m["n"]
+        assert m["den"] == float(pol.cohort_size)
+        np.testing.assert_allclose(
+            w[sel], (1.0 / (4 * np.asarray(probs)))[sel], rtol=1e-6)
+
+
+def test_importance_reweighting_corrects_cohort_mean_bias():
+    """Over many rounds the 1/(N p_c)-weighted masked_mean tracks the true
+    client mean far better than the unweighted cohort mean, which
+    systematically over-represents high-probability clients.  (Exactly
+    unbiased under pi_c ~= m p_c; at this skew the residual approximation
+    bias is ~0.22 vs the cohort mean's ~0.40 -- both pinned loosely.)"""
+    from repro.fed import ImportanceParticipation
+    probs = (0.4, 0.3, 0.2, 0.1)
+    pol = ImportanceParticipation(4, probs=probs, frac=0.5, seed=5)
+    x = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    ts = jnp.arange(4000, dtype=jnp.int32)
+    ws = jax.vmap(lambda t: pol.mask(t)["w"])(ts)               # (T, G)
+    est_w = np.asarray(jnp.sum(ws * x[None, :], axis=1)) / 2.0
+    sel = np.asarray(ws > 0, np.float64)
+    est_unw = (sel * np.asarray(x)[None, :]).sum(axis=1) / 2.0
+    true = 2.5
+    assert abs(est_w.mean() - true) < 0.3
+    assert abs(est_w.mean() - true) < abs(est_unw.mean() - true)
+
+
+def test_importance_exact_unbiased_at_cohort_one():
+    """At m = 1 the exponential-race inclusion probability is exactly p_c,
+    so the Horvitz-Thompson estimate is exactly unbiased -- the empirical
+    mean over rounds converges to the true mean."""
+    from repro.fed import ImportanceParticipation
+    probs = (0.4, 0.3, 0.2, 0.1)
+    pol = ImportanceParticipation(4, probs=probs, frac=0.25, seed=11)
+    assert pol.cohort_size == 1
+    x = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    ts = jnp.arange(4000, dtype=jnp.int32)
+    ws = jax.vmap(lambda t: pol.mask(t)["w"])(ts)
+    est = np.asarray(jnp.sum(ws * x[None, :], axis=1)) / 1.0
+    assert abs(est.mean() - 2.5) < 0.25
+
+
+def test_importance_rides_scan_driver_and_freezes_ef_memory():
+    """A skewed importance policy runs through run_scan for safl AND for the
+    error-feedback topk_ef baseline (weighted masks route through
+    mask_weights in the EF freeze), matching the host loop bitwise."""
+    from repro.fed import ImportanceParticipation
+    pol = ImportanceParticipation(G, probs=(0.4, 0.3, 0.2, 0.1), frac=0.5,
+                                  seed=3)
+    for setup in (lambda: _safl_setup()[2:], lambda: _baseline_setup("topk_ef")[2:]):
+        round_fn, fresh = setup()
+        key = jax.random.key(21)
+        p1, s1, h1 = run_host_loop(round_fn, _LinearSampler(), *fresh(),
+                                   rounds=4, key=key, donate=False,
+                                   participation=pol)
+        p2, s2, h2 = run_scan(round_fn, _LinearSampler(), *fresh(),
+                              rounds=4, key=key, chunk_size=2,
+                              participation=pol)
+        assert np.isfinite(h2["loss"]).all()
+        np.testing.assert_array_equal(h1["loss"], h2["loss"])
+        _assert_trees_equal(p1, p2)
+        _assert_trees_equal(s1, s2)
+
+
+def test_async_buffer_rejects_weighted_masks():
+    """The staleness buffer stores 0/1 cohort masks per generation; weighted
+    importance masks must be rejected at trace time, not silently mis-
+    aggregated."""
+    from repro.fed import ImportanceParticipation
+    base = SAFLConfig(sketch=_SK, server=AdaConfig(name="amsgrad", lr=0.05),
+                      client_lr=0.05, local_steps=2)
+    plan = make_packing_plan(_SK, _params0())
+    acfg = AsyncConfig(max_delay=1, delay="zero")
+    round_fn = make_async_round(base, _linear_loss, acfg, plan)
+    pol = ImportanceParticipation(G, probs=(0.4, 0.3, 0.2, 0.1), frac=0.5)
+    params = _params0()
+    state = init_async_state(base, acfg, params, plan, G)
+    smp = _LinearSampler()
+    _, batch = smp.sample(smp.init_state(), jnp.asarray(0, jnp.int32))
+    with pytest.raises(TypeError, match="weighted"):
+        round_fn(params, state, batch, jax.random.key(0),
+                 t=jnp.asarray(0, jnp.int32), base_key=jax.random.key(0),
+                 part_mask=pol.mask(jnp.asarray(0, jnp.int32)))

@@ -1,0 +1,250 @@
+"""Multi-pod scanned mesh driver (launch/train.py, DESIGN §8).
+
+Pins the ISSUE 4 contracts on an 8-forced-CPU-device host mesh:
+
+  * scanned mesh rounds (``run_mesh_scan``: one ``lax.scan`` OUTSIDE the
+    shard_map round, donated (params, opt, data_state, key) carries) are
+    bit-identical to per-round jitted mesh steps (``run_mesh_host_loop``)
+    for safl AND fedopt, on cross_device and cross_silo topologies;
+  * chunk-split invariance: chunked dispatch == one-dispatch, bitwise;
+  * donation safety: chunk_size=1 rethreads every donated carry across
+    dispatches without aliasing crashes;
+  * the plan-routed shard-local sketch (``make_sharded_packing_plan`` +
+    packed sk/desk inside shard_map) equals the per-leaf reference loop.
+
+Device policy (DESIGN §5): the 8-device flag must NOT leak into the main
+suite, so when this module is collected on a single-device session it
+re-runs itself in a subprocess with
+``--xla_force_host_platform_device_count=8`` (the mini-dry-run pattern);
+CI additionally runs the direct tests in a dedicated 8-device job step.
+cross_device cases need the jax>=0.6 stack -- partial-manual shard_map over
+the client axes hard-crashes the XLA bundled with jax 0.4.x
+(IsManualSubgroup CHECK; see tests/test_sharding_and_dryrun.py) -- while
+cross_silo (vmapped client deltas + full-manual sketch shard_map) runs on
+both stacks.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaConfig
+from repro.core.packed import make_sharded_packing_plan
+from repro.core.safl import SAFLConfig, init_safl
+from repro.core.sketch import SketchConfig
+from repro.data import BigramLMData, LMDataConfig
+from repro.launch.mesh import _mesh
+from repro.launch.train import (_mesh_pspecs, make_fedopt_scan_fn,
+                                make_fedopt_train_step, make_safl_train_step,
+                                mesh_sampler, num_clients_of,
+                                run_mesh_host_loop, run_mesh_scan,
+                                sharded_sketch_avg_desk)
+from repro.models import ModelConfig, init_params
+from repro.models.sharding import use_mesh
+
+ON_8 = jax.device_count() >= 8
+NEW_SHARD_MAP = hasattr(jax, "shard_map")   # partial-manual needs jax>=0.6
+
+needs8 = pytest.mark.skipif(not ON_8, reason="needs 8 forced CPU devices")
+
+TOPOLOGIES = [
+    pytest.param("cross_silo", id="cross_silo"),
+    pytest.param("cross_device", id="cross_device",
+                 marks=pytest.mark.skipif(
+                     not NEW_SHARD_MAP,
+                     reason="partial-manual shard_map hard-crashes the XLA "
+                            "bundled with jax 0.4.x (IsManualSubgroup)")),
+]
+
+MODEL = ModelConfig(name="meshscan", arch_type="dense", num_layers=1,
+                    d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                    vocab_size=64)
+
+
+def _mk(topology, kind="countsketch"):
+    """Mesh, config, sharded sampler for one (topology, compressor) case.
+
+    One (2, 2, 2) pod/data/model mesh serves both topologies: cross_device
+    clients = the 4 (pod, data) groups, cross_silo clients = the 2 pods
+    (mb = 4 is data-sharded 2-way there)."""
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = SAFLConfig(sketch=SketchConfig(kind=kind, ratio=0.1, min_b=8),
+                     server=AdaConfig(name="amsgrad", lr=0.01),
+                     client_lr=0.5, local_steps=2)
+    G = num_clients_of(mesh, topology)
+    data = BigramLMData(LMDataConfig(vocab_size=64, seq_len=16,
+                                     num_clients=G, alpha=0.05))
+    smp = mesh_sampler(mesh, data.device_sampler(8, 2), topology)
+    return mesh, cfg, smp
+
+
+def _fresh(cfg):
+    p = init_params(MODEL, jax.random.key(0))
+    return p, init_safl(cfg, p)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# scanned == per-round, bitwise
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+@pytest.mark.parametrize("kind", ["countsketch", "none"])
+def test_scan_matches_per_round_mesh_step_bitwise(topology, kind):
+    """N scanned mesh rounds == N per-round jitted mesh steps, bit for bit:
+    same fold_in(key, t) chain, same device-sampled sharded batches.
+    kind="none" is the FedOPT raw-delta O(d) all-reduce inside the same
+    scan layout."""
+    mesh, cfg, smp = _mk(topology, kind)
+    with use_mesh(mesh):
+        step, _ = make_safl_train_step(MODEL, cfg, mesh, topology)
+        key = jax.random.key(42)
+        p1, o1, h1 = run_mesh_host_loop(step, smp, *_fresh(cfg), rounds=3,
+                                        key=key, donate=False)
+        # donate=True on the scan side also exercises the donated carries
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology)
+    assert h2["loss"].shape == (3,)
+    assert np.isfinite(h2["loss"]).all()
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(o1, o2)
+
+
+@needs8
+def test_fedopt_scan_fn_matches_fedopt_step_bitwise():
+    """The make_fedopt_scan_fn entry point (one chunk, donated carries)
+    reproduces make_fedopt_train_step rounds exactly."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology, "countsketch")  # fedopt overrides sketch
+    with use_mesh(mesh):
+        step, _ = make_fedopt_train_step(MODEL, cfg, mesh, topology)
+        key = jax.random.key(5)
+        p1, o1, h1 = run_mesh_host_loop(step, smp, *_fresh(cfg), rounds=2,
+                                        key=key, donate=False)
+        chunk, _ = make_fedopt_scan_fn(MODEL, cfg, mesh, topology,
+                                       sampler=smp, num_rounds=2)
+        # key_data(key) aliases key's buffer and the chunk donates arg 3:
+        # pass a fresh device copy so `key` survives
+        kd = jnp.asarray(np.asarray(jax.random.key_data(key)))
+        p2, o2, _, _, h2 = chunk(*_fresh(cfg), smp.init_state(), kd,
+                                 jnp.asarray(0, jnp.int32))
+    np.testing.assert_array_equal(h1["loss"], np.asarray(h2["loss"]))
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(o1, o2)
+
+
+# ---------------------------------------------------------------------------
+# chunking + donation
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_mesh_scan_chunk_split_invariance():
+    """Chunked dispatch (2+2) is bit-identical to one 4-round dispatch and
+    the stitched on-device loss history matches."""
+    mesh, cfg, smp = _mk("cross_silo")
+    with use_mesh(mesh):
+        key = jax.random.key(7)
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=4, key=key, topology="cross_silo")
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=4, key=key, topology="cross_silo",
+                                   chunk_size=2)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(o1, o2)
+
+
+@needs8
+def test_mesh_scan_donation_safe():
+    """chunk_size=1 rethreads every donated (params, opt, data_state, key)
+    buffer through 3 separate dispatches: an aliasing bug (donated buffer
+    read after donation) crashes here.  on_chunk must observe progress."""
+    mesh, cfg, smp = _mk("cross_silo")
+    seen = []
+    with use_mesh(mesh):
+        p0, _ = _fresh(cfg)
+        p, o, h = run_mesh_scan(
+            MODEL, cfg, mesh, smp, *_fresh(cfg), rounds=3,
+            key=jax.random.key(0), topology="cross_silo", chunk_size=1,
+            donate=True,
+            on_chunk=lambda t, pp, oo, hh: seen.append((t, hh["loss"].shape)))
+    assert seen == [(1, (1,)), (2, (1,)), (3, (1,))]
+    assert np.isfinite(h["loss"]).all()
+    # params actually moved (the donated carry is not a stale alias)
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p)))
+    assert moved
+
+
+# ---------------------------------------------------------------------------
+# plan-routed shard-local sketch == per-leaf reference
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("kind", ["countsketch", "srht", "gaussian"])
+def test_sharded_sketch_plan_route_matches_per_leaf(kind):
+    """The packed-plan route inside shard_map (operator derived once, one
+    fused pass, ONE (G_loc, b_total) pmean) produces exactly the per-leaf
+    reference loop's values -- same per-leaf fold_in chain."""
+    topology = "cross_silo"
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    skcfg = SketchConfig(kind=kind, ratio=0.1, min_b=8)
+    with use_mesh(mesh):
+        abstract, pspecs = _mesh_pspecs(MODEL, topology)
+        plan = make_sharded_packing_plan(skcfg, abstract, pspecs,
+                                         dict(mesh.shape))
+        params = init_params(MODEL, jax.random.key(0))
+        G = num_clients_of(mesh, topology)
+        deltas = jax.tree.map(
+            lambda p: jax.random.normal(jax.random.key(9),
+                                        (G,) + p.shape, jnp.float32), params)
+        key = jax.random.key(3)
+        ref = jax.jit(lambda d, k: sharded_sketch_avg_desk(
+            mesh, skcfg, pspecs, d, k, topology))(deltas, key)
+        pkd = jax.jit(lambda d, k: sharded_sketch_avg_desk(
+            mesh, skcfg, pspecs, d, k, topology, plan=plan))(deltas, key)
+    _assert_trees_equal(ref, pkd)
+
+
+# ---------------------------------------------------------------------------
+# single-device fallback: re-run this module on 8 forced CPU devices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(ON_8, reason="already running on >= 8 devices")
+@pytest.mark.skipif(os.environ.get("MESH_SCAN_NO_SUBPROCESS") == "1",
+                    reason="suppressed: a dedicated 8-device step runs the "
+                           "suite directly (ci.yml), or we ARE the "
+                           "subprocess (re-entry guard)")
+def test_mesh_scan_suite_on_8_forced_devices_subprocess():
+    """Tier-1 coverage on a single-device session: run this module's direct
+    tests in a subprocess with the 8-device host flag (which must never leak
+    into the main test session, DESIGN §5)."""
+    env = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH",
+                                                       "/usr/bin:/bin"),
+           "HOME": os.environ.get("HOME", "/root"),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           # the device-count flag only affects the CPU backend: pin it so a
+           # GPU machine cannot land back on < 8 devices and recurse
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+           "MESH_SCAN_NO_SUBPROCESS": "1"}
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.abspath(__file__)],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    tail = r.stdout[-3000:] + "\n" + r.stderr[-2000:]
+    assert r.returncode == 0, tail
+    assert " passed" in r.stdout, tail   # not everything skipped

@@ -112,3 +112,78 @@ def test_sketch_mergeability(seed, g):
     mean_sk = sum(np.array(s) for s in sks) / g
     sk_mean = np.array(S.sk_leaf(cfg, key, sum(vs) / g))
     np.testing.assert_allclose(mean_sk, sk_mean, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# participation policies (ISSUE 4 satellite): fed/participation.py invariants
+# ---------------------------------------------------------------------------
+
+from repro.fed.participation import (ImportanceParticipation,  # noqa: E402
+                                     UniformParticipation, round_variates)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 24), frac=st.floats(1e-3, 1.0),
+       seed=st.integers(0, 2**31 - 1), t=st.integers(0, 10_000))
+def test_participation_cohort_bounds_and_no_replacement(n, frac, seed, t):
+    """For ANY frac in (0, 1]: the mask is strictly 0/1 (no client counted
+    twice -- sampling without replacement), the cohort size is within
+    [1, N], and the mask sums to exactly the declared cohort size."""
+    pol = UniformParticipation(n, frac=frac, seed=seed)
+    m = np.asarray(pol.mask(jnp.asarray(t, jnp.int32)))
+    assert m.shape == (n,)
+    assert set(np.unique(m)).issubset({np.float32(0.0), np.float32(1.0)})
+    assert 1 <= pol.cohort_size <= n
+    assert int(m.sum()) == pol.cohort_size
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 16), extra=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1), t=st.integers(0, 10_000))
+def test_participation_pure_in_round_client_seed(n, extra, seed, t):
+    """The per-client variate stream is a pure function of
+    (round, client, seed): a fresh policy instance reproduces the mask
+    bitwise, and client c's variate does not change when clients are added
+    (the N-independence the device data sampler also guarantees)."""
+    tt = jnp.asarray(t, jnp.int32)
+    pol = UniformParticipation(n, frac=0.5, seed=seed)
+    m1 = np.asarray(pol.mask(tt))
+    m2 = np.asarray(UniformParticipation(n, frac=0.5, seed=seed).mask(tt))
+    np.testing.assert_array_equal(m1, m2)
+    u_small = np.asarray(round_variates(n, seed, tt))
+    u_large = np.asarray(round_variates(n + extra, seed, tt))
+    np.testing.assert_array_equal(u_small, u_large[:n])
+    if n >= 4:
+        # different rounds draw different variates (collision probability
+        # across 4+ f32 uniforms is negligible)
+        u_next = np.asarray(round_variates(n, seed, tt + 1))
+        assert not np.array_equal(u_small, u_next)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 2**31 - 1),
+       t=st.integers(0, 10_000),
+       raw=st.lists(st.floats(0.05, 1.0), min_size=2, max_size=12))
+def test_importance_mask_invariants(n, seed, t, raw):
+    """ImportanceParticipation: exactly m clients sampled (no replacement),
+    sampled weights equal 1/(N p_c), static denominator m, and the mask is
+    reproducible from a fresh policy instance."""
+    raw = (raw * n)[:n]
+    probs = tuple(float(p) / sum(raw) for p in raw)
+    # renormalize the tail element so the tuple sums to 1 within 1e-6
+    probs = probs[:-1] + (1.0 - sum(probs[:-1]),)
+    # stay inside the policy's validity regime m * max(p) <= 1
+    m = max(1, min(n // 2, int(1.0 / max(probs))))
+    pol = ImportanceParticipation(n, probs=probs, frac=m / n, seed=seed)
+    assert pol.cohort_size == m
+    tt = jnp.asarray(t, jnp.int32)
+    m = pol.mask(tt)
+    w = np.asarray(m["w"])
+    sel = w > 0
+    assert int(sel.sum()) == pol.cohort_size == m["n"]
+    assert m["den"] == float(pol.cohort_size)
+    np.testing.assert_allclose(
+        w[sel], (1.0 / (n * np.asarray(probs, np.float64)))[sel], rtol=1e-5)
+    m2 = ImportanceParticipation(n, probs=probs, frac=0.5,
+                                 seed=seed).mask(tt)
+    np.testing.assert_array_equal(w, np.asarray(m2["w"]))

@@ -1,0 +1,166 @@
+"""Multi-chunk checkpoint resume (ISSUE 4 satellite, ROADMAP "restart path").
+
+examples/train_lm.py checkpoints a resumable ``(t, key)`` cursor at every
+chunk boundary: because every per-round stream (device-sampled data, cohort
+masks, sketch operators, LR schedule) is a pure function of the ABSOLUTE
+round index under the base key, restoring ``(params, opt, cursor)`` and
+re-entering ``run_scan(start_round=t)`` must replay the uninterrupted
+trajectory bit for bit.  These tests exercise exactly that cursor format
+through ``checkpoint.io``'s npz round-trip (f32/u32/i32 exact).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.adaptive import AdaConfig
+from repro.core.packed import make_packing_plan
+from repro.core.safl import SAFLConfig, init_safl, safl_round
+from repro.core.sketch import SketchConfig
+from repro.launch.driver import run_scan
+
+G = 3
+
+
+class _LinearSampler:
+    """Minimal driver-protocol sampler (pure fn of the absolute round)."""
+
+    def __init__(self, clients=G, local_steps=2, mb=4):
+        self.shape = (clients, local_steps, mb, 16)
+        self.W = np.asarray(jax.random.normal(jax.random.key(1), (16, 4)))
+
+    def init_state(self):
+        return {"W": jnp.asarray(self.W, jnp.float32)}
+
+    def sample(self, state, t):
+        x = jax.random.normal(jax.random.fold_in(jax.random.key(11), t),
+                              self.shape)
+        return state, {"x": x, "y": x @ state["W"]}
+
+
+def _linear_loss(params, batch):
+    return jnp.mean((batch["x"] @ params["W"] - batch["y"]) ** 2)
+
+
+def _setup():
+    cfg = SAFLConfig(
+        sketch=SketchConfig(kind="countsketch", ratio=0.25, min_b=8),
+        server=AdaConfig(name="amsgrad", lr=0.05), client_lr=0.05,
+        local_steps=2)
+    params0 = {"W": jnp.zeros((16, 4))}
+    plan = make_packing_plan(cfg.sketch, params0)
+    round_fn = functools.partial(safl_round, cfg, _linear_loss, plan=plan)
+    fresh = lambda: ({"W": jnp.zeros((16, 4))},
+                     init_safl(cfg, {"W": jnp.zeros((16, 4))}))
+    return round_fn, fresh
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _cursor_state(params, opt, t, key):
+    """The exact checkpoint payload examples/train_lm.py saves per chunk."""
+    return {"params": params, "opt": opt,
+            "cursor": {"t": jnp.asarray(t),
+                       "key": jax.random.key_data(key)}}
+
+
+def test_resume_from_chunk_boundary_is_bit_identical(tmp_path):
+    """Kill after the chunk that crosses round 4, restore the (t, key)
+    cursor, resume with start_round -- final params/opt and the stitched
+    loss history match the uninterrupted 6-round run bitwise."""
+    round_fn, fresh = _setup()
+    smp = _LinearSampler()
+    key = jax.random.key(3)
+    ckpt = str(tmp_path / "ck")
+
+    # uninterrupted reference
+    p_ref, s_ref, h_ref = run_scan(round_fn, smp, *fresh(), rounds=6,
+                                   key=key, chunk_size=2)
+
+    # interrupted run: only rounds [0, 4), checkpointing every chunk
+    def on_chunk(t_done, p, s, hist):
+        save_checkpoint(ckpt, _cursor_state(p, s, t_done, key), step=t_done)
+
+    _, _, h_a = run_scan(round_fn, smp, *fresh(), rounds=4, key=key,
+                         chunk_size=2, on_chunk=on_chunk)
+
+    # restart: a FRESH process would rebuild like-structured zeros, restore,
+    # and re-enter the driver at the cursor
+    like = _cursor_state(*fresh(), 0, key)
+    state, step = restore_checkpoint(ckpt, like)
+    assert step == 4 and int(state["cursor"]["t"]) == 4
+    k2 = jax.random.wrap_key_data(state["cursor"]["key"])
+    p_b, s_b, h_b = run_scan(round_fn, smp, state["params"], state["opt"],
+                             rounds=6, key=k2, chunk_size=2,
+                             start_round=int(state["cursor"]["t"]))
+
+    assert h_b["loss"].shape == (2,)
+    np.testing.assert_array_equal(
+        np.concatenate([h_a["loss"], h_b["loss"]]), h_ref["loss"])
+    _assert_trees_equal(p_b, p_ref)
+    _assert_trees_equal(s_b, s_ref)
+
+
+def test_resume_is_chunk_split_invariant(tmp_path):
+    """Resuming at a round that is NOT a multiple of the new chunk size
+    (start 4, chunk 3 -> tail chunks 2) still lands on the reference
+    trajectory: nothing about the streams depends on chunk boundaries."""
+    round_fn, fresh = _setup()
+    smp = _LinearSampler()
+    key = jax.random.key(8)
+    ckpt = str(tmp_path / "ck2")
+
+    p_ref, s_ref, h_ref = run_scan(round_fn, smp, *fresh(), rounds=7,
+                                   key=key)
+    p4, s4, _ = run_scan(round_fn, smp, *fresh(), rounds=4, key=key,
+                         chunk_size=4)
+    save_checkpoint(ckpt, _cursor_state(p4, s4, 4, key), step=4)
+
+    state, _ = restore_checkpoint(ckpt, _cursor_state(*fresh(), 0, key))
+    p_b, s_b, h_b = run_scan(
+        round_fn, smp, state["params"], state["opt"], rounds=7,
+        key=jax.random.wrap_key_data(state["cursor"]["key"]), chunk_size=3,
+        start_round=int(state["cursor"]["t"]))
+    assert h_b["loss"].shape == (3,)
+    np.testing.assert_array_equal(h_b["loss"], h_ref["loss"][4:])
+    _assert_trees_equal(p_b, p_ref)
+    _assert_trees_equal(s_b, s_ref)
+
+
+def test_resume_with_participation_and_lr_schedule(tmp_path):
+    """The cursor also pins cohort masks and kwargs_fn streams: a resumed
+    run under partial participation + a round-indexed LR scale matches the
+    uninterrupted trajectory bitwise (both are pure functions of the
+    absolute round index)."""
+    from repro.fed import UniformParticipation
+    round_fn, fresh = _setup()
+    smp = _LinearSampler()
+    key = jax.random.key(5)
+    pol = UniformParticipation(G, frac=0.5, seed=2)
+    sched = lambda t: {"lr_scale": 1.0 / (1.0 + 0.1 * t)}
+    ckpt = str(tmp_path / "ck3")
+
+    p_ref, s_ref, h_ref = run_scan(round_fn, smp, *fresh(), rounds=6,
+                                   key=key, participation=pol,
+                                   kwargs_fn=sched)
+    p3, s3, _ = run_scan(round_fn, smp, *fresh(), rounds=3, key=key,
+                         participation=pol, kwargs_fn=sched)
+    save_checkpoint(ckpt, _cursor_state(p3, s3, 3, key), step=3)
+
+    state, _ = restore_checkpoint(ckpt, _cursor_state(*fresh(), 0, key))
+    p_b, s_b, h_b = run_scan(
+        round_fn, smp, state["params"], state["opt"], rounds=6,
+        key=jax.random.wrap_key_data(state["cursor"]["key"]),
+        participation=pol, kwargs_fn=sched,
+        start_round=int(state["cursor"]["t"]))
+    np.testing.assert_array_equal(h_b["loss"], h_ref["loss"][3:])
+    _assert_trees_equal(p_b, p_ref)
+    _assert_trees_equal(s_b, s_ref)
