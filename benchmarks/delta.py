@@ -1,0 +1,76 @@
+"""Per-row delta table between two BENCH_sketch.json perf trajectories.
+
+    python -m benchmarks.delta OLD.json NEW.json [--fail-on-missing]
+
+Prints one markdown-ish row per key present in either file: old value, new
+value, and the delta (a ratio for ``us_per_call`` rows, an exact-drift flag
+for ``*.final_loss`` convergence pins -- those are bitwise pins, so any
+drift is called out even when numerically tiny).  CI runs this after the
+bench job against (a) the committed baseline and (b) the previous run's
+uploaded artifact, so a PR's perf movement is readable from the job log
+without downloading anything.
+
+Purely informational by default (the enforcement lives in
+``benchmarks.run --guard``); ``--fail-on-missing`` exits non-zero when NEW
+dropped rows OLD had, which would silently shrink guard coverage.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt_time(us: float) -> str:
+    return f"{us:,.0f}us"
+
+
+def delta_rows(old: dict, new: dict) -> list[tuple[str, str, str, str]]:
+    rows = []
+    for name in sorted(set(old) | set(new)):
+        o, n = old.get(name), new.get(name)
+        if o is None:
+            rows.append((name, "-", _fmt_val(name, n), "NEW"))
+        elif n is None:
+            rows.append((name, _fmt_val(name, o), "-", "MISSING"))
+        elif name.endswith(".final_loss"):
+            drift = "exact" if n == o else f"DRIFT {n - o:+.3e}"
+            rows.append((name, f"{o:.6f}", f"{n:.6f}", drift))
+        elif not o:
+            rows.append((name, _fmt_time(o), _fmt_time(n),
+                         "=" if n == o else "NEW-NONZERO"))
+        else:
+            rows.append((name, _fmt_time(o), _fmt_time(n), f"{n / o:.2f}x"))
+    return rows
+
+
+def _fmt_val(name: str, v: float) -> str:
+    return f"{v:.6f}" if name.endswith(".final_loss") else _fmt_time(v)
+
+
+def main(argv: list[str]) -> int:
+    fail_on_missing = "--fail-on-missing" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 2:
+        print(__doc__)
+        return 2
+    with open(paths[0]) as f:
+        old = json.load(f)
+    with open(paths[1]) as f:
+        new = json.load(f)
+    rows = delta_rows(old, new)
+    w = max(len(r[0]) for r in rows) if rows else 4
+    print(f"| {'row':<{w}} | {'old':>14} | {'new':>14} | delta |")
+    print(f"|{'-' * (w + 2)}|{'-' * 16}|{'-' * 16}|-------|")
+    missing = 0
+    for name, o, n, d in rows:
+        print(f"| {name:<{w}} | {o:>14} | {n:>14} | {d} |")
+        missing += d == "MISSING"
+    if missing and fail_on_missing:
+        print(f"# {missing} row(s) dropped from the trajectory")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

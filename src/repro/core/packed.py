@@ -209,6 +209,22 @@ def _grouped(ops) -> dict[tuple[int, int], list[OpSpec]]:
     return groups
 
 
+def derive_generation_params(plan: PackingPlan, base_key: jax.Array,
+                             g: jax.Array) -> dict:
+    """Re-derive generation round ``g``'s sketch operator from the run's
+    base key: ``derive_round_params(plan, fold_in(base_key, g))``.
+
+    This is the contract the async staleness buffers depend on (DESIGN §7):
+    a delayed payload sketched in round g can only be desketched with round
+    g's OWN operator (Property 1 linearity holds within one operator), and
+    because every round key is ``fold_in(base_key, t)``, the operator is
+    recomputable at pop time from ``(base_key, g)`` alone -- nothing but the
+    payload needs storing.  Single source of the fold, shared by
+    ``fed.async_buffer.make_async_round`` and the mesh ring buffer
+    (``launch/train.py``)."""
+    return derive_round_params(plan, jax.random.fold_in(base_key, g))
+
+
 def derive_round_params(plan: PackingPlan, key: jax.Array) -> dict:
     """Derive the round's sketch operator ONCE.
 

@@ -97,6 +97,37 @@ def masked_mean_tree(tree: Pytree, mask) -> Pytree:
     return jax.tree.map(lambda x: masked_mean(x, mask), tree)
 
 
+def masked_psum_mean(x: jax.Array, w_loc: jax.Array, den,
+                     client_axes) -> jax.Array:
+    """``masked_mean`` distributed over shard_map client axes.
+
+    ``x`` is a shard-local ``(G_loc, ...)`` block of the global client-major
+    payload and ``w_loc`` the matching ``(G_loc,)`` slice of the cohort
+    weights.  Computes the global cohort mean with the SAME collective count
+    as the unmasked uplink: weighted local sum over the shard's client rows,
+    ONE psum over the client axes (plus a scalar weight psum), divide.
+    Returns a ``(1, ...)`` row (every shard holds the identical mean).
+
+    ``den=None`` divides by the global weight sum (the 0/1-mask cohort
+    mean); a static ``den`` is the Horvitz-Thompson denominator of a
+    weighted mask (``core.safl.masked_mean`` semantics).  Bitwise pin: with
+    an all-ones mask and one client row per shard this lowers to
+    ``psum(x) / n`` -- exactly what ``lax.pmean`` computes -- so the masked
+    route reproduces the unmasked trajectory bit for bit
+    (tests/test_mesh_scan.py)."""
+    w = w_loc.reshape((w_loc.shape[0],) + (1,) * (x.ndim - 1)).astype(x.dtype)
+    sw = jnp.sum(x * w, axis=0, keepdims=True)
+    if den is None:
+        wsum = jnp.sum(w_loc)
+        if client_axes:
+            sw = jax.lax.psum(sw, client_axes)
+            wsum = jax.lax.psum(wsum, client_axes)
+        return sw / jnp.maximum(wsum, 1.0).astype(x.dtype)
+    if client_axes:
+        sw = jax.lax.psum(sw, client_axes)
+    return sw / jnp.asarray(den, x.dtype)
+
+
 def masked_where_tree(mask, new: Pytree, old: Pytree) -> Pytree:
     """Per-client state select: sampled clients take ``new`` leaves, the rest
     keep ``old`` (leaves (G, ...)).  Used for error-feedback memories under

@@ -2,10 +2,12 @@
 buffers, and sampling policies for the on-device scan driver (DESIGN.md §7).
 """
 
-from repro.fed.async_buffer import (AsyncConfig, init_async_state,
-                                    make_async_round)
+from repro.fed.async_buffer import (AsyncConfig, arrival_weight,
+                                    init_async_state, make_async_round)
 from repro.fed.participation import (AvailabilityTrace, FixedCohort,
                                      FullParticipation,
                                      ImportanceParticipation,
-                                     UniformParticipation, masked_mean,
-                                     masked_mean_tree, round_variates)
+                                     UniformParticipation,
+                                     check_policy_clients, is_weighted_mask,
+                                     masked_mean, masked_mean_tree,
+                                     round_variates)

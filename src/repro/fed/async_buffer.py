@@ -48,7 +48,8 @@ import jax.numpy as jnp
 
 from repro.core.adaptive import apply_update, init_opt_state
 from repro.core.clipped import ClippedSAFLConfig, clip_delta
-from repro.core.packed import (PackingPlan, derive_round_params, desk_flat,
+from repro.core.packed import (PackingPlan, derive_generation_params,
+                               derive_round_params, desk_flat,
                                sk_packed_clients, unpack_tree)
 from repro.core.safl import SAFLConfig, client_delta, masked_mean
 
@@ -105,6 +106,27 @@ class AsyncConfig:
             jax.random.fold_in(key_g, c), (), 0, D, dtype=jnp.int32))(clients)
 
 
+def arrival_weight(acfg: AsyncConfig, g: jax.Array, d: int,
+                   num_clients: int) -> jax.Array:
+    """(G,) staleness-discounted arrival weights of generation ``g`` popped
+    at delay ``d``: ``1{delay(g, c) == d} * (1 + d)^-alpha``, with
+    generations before the run start (g < 0) masked out for d > 0.  The
+    d = 0 case REQUIRES ``g = t >= 0`` (the push round itself -- true for
+    any caller popping the round it just pushed): guarding it on the
+    traced ``g >= 0`` would break the ``delay="zero"`` constant-fold that
+    makes the zero-delay round lower to the synchronous program, i.e. the
+    bitwise parity pin.  Pure in (g, d, seed) -- the single source of
+    the pop predicate, shared by the single-host round below and the mesh
+    ring buffer (``launch/train.py``), so both paths pop the exact same
+    arrival schedule.  Participation enters multiplicatively: the caller
+    multiplies by the generation's stored 0/1 cohort mask, which is exact
+    (0/1 factors introduce no rounding)."""
+    arrive = acfg.delays(g, num_clients) == d
+    if d > 0:
+        arrive = arrive & (g >= 0)
+    return arrive * ((1.0 + d) ** -acfg.staleness_alpha)
+
+
 def _split_cfg(cfg) -> tuple[SAFLConfig, ClippedSAFLConfig | None]:
     if isinstance(cfg, ClippedSAFLConfig):
         return cfg.base, cfg
@@ -157,7 +179,8 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
 
         deltas, losses = jax.vmap(one_client)(batch)
         G = jax.tree.leaves(deltas)[0].shape[0]
-        if isinstance(part_mask, dict):
+        from repro.fed.participation import is_weighted_mask
+        if is_weighted_mask(part_mask):
             raise TypeError(
                 "the async staleness buffer stores 0/1 cohort masks per "
                 "generation; weighted (importance-sampling) masks are not "
@@ -185,19 +208,17 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
         weighted = []                     # (W_d, S_d, rp_g) per delay
         for d in range(D):                # static: D is a config constant
             g = t - d
-            arrive = acfg.delays(g, G) == d
             if d == 0:
                 payload, w_in = sks, mask
             else:
-                arrive = arrive & (g >= 0)
                 payload = buf[jnp.mod(g, D)]
                 w_in = bufw[jnp.mod(g, D)]
             if acfg.delay == "zero" and d > 0:
                 continue                  # statically empty arrival group
-            w = w_in * arrive * ((1.0 + d) ** -acfg.staleness_alpha)
+            w = w_in * arrival_weight(acfg, g, d, G)
             S_d = jnp.sum(w[:, None] * payload, axis=0)
-            rp_g = rp_t if d == 0 else derive_round_params(
-                plan, jax.random.fold_in(base_key, g))
+            rp_g = rp_t if d == 0 else derive_generation_params(
+                plan, base_key, g)
             weighted.append((jnp.sum(w), S_d, rp_g))
 
         W = sum(wd for wd, _, _ in weighted)

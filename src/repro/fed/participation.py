@@ -48,6 +48,33 @@ import numpy as np
 from repro.core.safl import masked_mean, masked_mean_tree  # noqa: F401
 
 
+def is_weighted_mask(mask) -> bool:
+    """True for the *weighted* dict mask form (``{"w", "den", "n"}``) emitted
+    by ``ImportanceParticipation``.
+
+    The async staleness buffers (single-host ``fed.async_buffer`` and the
+    mesh ring buffer in ``launch/train.py``) store plain 0/1 cohort masks
+    per generation and use this predicate to reject weighted masks at trace
+    time with one consistent error."""
+    return isinstance(mask, dict)
+
+
+def check_policy_clients(policy, num_clients: int, where: str) -> None:
+    """Fail fast when a policy's client universe does not match the driver's.
+
+    A mismatched ``num_clients`` would silently sample cohorts over the
+    wrong index set (the mask is positional).  The mesh driver calls this
+    at build time (it knows G from the mesh topology); the single-host
+    driver cannot -- it learns G only from the batch shape at trace time,
+    where a mismatch surfaces as a broadcast error in ``masked_mean``."""
+    n = getattr(policy, "num_clients", None)
+    if n is not None and int(n) != int(num_clients):
+        raise ValueError(
+            f"{where}: participation policy covers {n} clients but the "
+            f"driver runs {num_clients} -- build the policy with "
+            f"num_clients={num_clients}")
+
+
 def round_variates(num_clients: int, seed: int, t) -> jax.Array:
     """Per-(round, client) uniforms shared by the randomized policies.
 

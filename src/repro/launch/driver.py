@@ -69,8 +69,16 @@ def _with_bits(metrics: dict, bits_per_round: Optional[int],
     return {**metrics, "uplink_bits": bits}
 
 
-def _round_kwargs(t, key, kwargs_fn, participation, buffer):
-    """Per-round traced kwargs for the round fn + the round's cohort mask."""
+def round_hook_kwargs(t, key, kwargs_fn, participation, buffer):
+    """Per-round traced kwargs for the round fn + the round's cohort mask.
+
+    This is THE contract of the repro.fed hooks, shared by both drivers (the
+    single-host scan here and the mesh scan in ``launch/train.py``): the
+    cohort mask is evaluated in the scan body as a pure function of the
+    absolute round index (``participation.mask(t)``) and handed to the round
+    as ``part_mask``; a staleness buffer additionally receives the traced
+    round index ``t`` and the run's base key ``base_key`` (ring-buffer
+    addressing + per-generation operator re-derivation)."""
     kw = dict(kwargs_fn(t)) if kwargs_fn is not None else {}
     mask = None
     if participation is not None:
@@ -80,6 +88,9 @@ def _round_kwargs(t, key, kwargs_fn, participation, buffer):
         kw["t"] = t
         kw["base_key"] = key
     return kw, mask
+
+
+_round_kwargs = round_hook_kwargs         # back-compat alias
 
 
 def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
@@ -99,7 +110,8 @@ def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
         def body(carry, t):
             params, state, dstate = carry
             dstate, batch = sampler.sample(dstate, t)
-            kw, mask = _round_kwargs(t, key, kwargs_fn, participation, buffer)
+            kw, mask = round_hook_kwargs(t, key, kwargs_fn, participation,
+                                         buffer)
             params, state, m = round_fn(params, state, batch,
                                         jax.random.fold_in(key, t), **kw)
             return (params, state, dstate), _with_bits(m, bits_per_round,
@@ -188,7 +200,8 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     for t in range(int(start_round), rounds):
         tt = jnp.asarray(t, jnp.int32)
         data_state, batch = sample(data_state, tt)
-        kw, mask = _round_kwargs(tt, key, kwargs_fn, participation, buffer)
+        kw, mask = round_hook_kwargs(tt, key, kwargs_fn, participation,
+                                     buffer)
         params, state, m = step(params, state, batch,
                                 jax.random.fold_in(key, tt), **kw)
         hists.append(jax.tree.map(np.asarray,

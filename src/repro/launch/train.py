@@ -30,12 +30,16 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
-from repro.core.packed import (PackingPlan, derive_round_params, desk_flat,
+from repro.core.packed import (PackingPlan, derive_generation_params,
+                               derive_round_params, desk_flat,
                                make_sharded_packing_plan, pack_tree, sk_flat,
                                unpack_tree)
-from repro.core.safl import SAFLConfig, client_delta
+from repro.core.safl import (SAFLConfig, client_delta, mask_weights,
+                             masked_mean, masked_mean_tree, masked_psum_mean)
 from repro.core.sketch import (SKETCH_CHUNK_NUMEL, SketchConfig, desk_leaf,
                                desk_leaf_stacked, sk_leaf, sk_leaf_stacked)
+from repro.fed.participation import check_policy_clients, is_weighted_mask
+from repro.launch.driver import round_hook_kwargs
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, forward, loss_fn, param_shapes
 from repro.models.sharding import param_pspecs
@@ -65,6 +69,12 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
     return _shard_map_impl(f, mesh, in_specs, out_specs, **kw)
 
 Pytree = Any
+
+# Test hook: force the jax-0.4.x cross_device client-delta formulation (the
+# vmap fallback below) on the new stack too, so its bitwise parity against
+# the partial-manual shard_map path can be asserted where both compile
+# (tests/test_mesh_scan.py).
+_FORCE_VMAP_CLIENT_DELTAS = False
 
 
 def data_axes_of(mesh) -> tuple[str, ...]:
@@ -101,10 +111,24 @@ def num_clients_of(mesh, topology: str) -> int:
 _SKETCH_CHUNK_NUMEL = SKETCH_CHUNK_NUMEL   # back-compat alias
 
 
-def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key):
+def _collect(s, client_axes, w_loc, den):
+    """The compressed uplink collective: ``pmean`` over the client axes when
+    the round has no cohort mask, else the masked cohort mean fused into the
+    SAME single collective (``core.safl.masked_psum_mean``: weighted local
+    sum, one psum, divide by the global cohort weight / static HT
+    denominator).  ``s`` keeps its leading local-client axis either way
+    (size 1 after masking -- every shard holds the identical cohort mean),
+    so the downstream desk/mean lowering is shared."""
+    if w_loc is None:
+        return jax.lax.pmean(s, client_axes) if client_axes else s
+    return masked_psum_mean(s, w_loc, den, client_axes)
+
+
+def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key,
+                           w_loc=None, den=None):
     """Per-leaf REFERENCE path, PER DEVICE inside shard_map.  deltas leaves:
     (G_loc, *local_shard).  Every cross-client collective in SAFL is the
-    pmean below -- b floats per tensor, not d.
+    collect below -- b floats per tensor, not d.
 
     Leaves whose local shard exceeds SKETCH_CHUNK_NUMEL are sketched per
     slice of their leading (layer-stack) axis via lax.map: this bounds the
@@ -113,7 +137,16 @@ def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key):
 
     This is the ``plan=None`` fallback; the production route is the packed
     plan path below (same per-leaf fold_in chain, no per-round Python tree
-    traversal), pinned bitwise equal by tests/test_mesh_scan.py."""
+    traversal), pinned bitwise equal by tests/test_mesh_scan.py.  Under a
+    cohort mask (``w_loc``) the per-leaf route needs exactly one client row
+    per shard (it folds the local client axis into the flattened leaf);
+    multi-client shards take the packed route."""
+    if w_loc is not None:
+        g_loc = jax.tree_util.tree_leaves(deltas)[0].shape[0]
+        if g_loc != 1:
+            raise NotImplementedError(
+                f"masked per-leaf sketch path needs one client row per "
+                f"shard, got G_loc={g_loc}; use the packed plan route")
     leaves, treedef = jax.tree_util.tree_flatten(deltas)
     out = []
     for i, leaf in enumerate(leaves):
@@ -126,14 +159,18 @@ def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key):
         if numel > SKETCH_CHUNK_NUMEL and len(lshape) >= 2 and n0 > 1:
             vs = leaf.reshape(n0, numel // n0).astype(jnp.float32)
             s = sk_leaf_stacked(skcfg, lk, vs)                # (n0, b_sub)
-            if client_axes:
+            if w_loc is not None:   # masked uplink (one client row: s[None])
+                s = masked_psum_mean(s[None], w_loc, den, client_axes)[0]
+            elif client_axes:
                 s = jax.lax.pmean(s, client_axes)  # <-- compressed uplink
             u = desk_leaf_stacked(skcfg, lk, s, numel // n0)
             out.append(u.reshape(leaf.shape))
             continue
         v = leaf.reshape(-1).astype(jnp.float32)
         s = sk_leaf(skcfg, lk, v)
-        if client_axes:
+        if w_loc is not None:
+            s = masked_psum_mean(s[None], w_loc, den, client_axes)[0]
+        elif client_axes:
             s = jax.lax.pmean(s, client_axes)      # <-- compressed uplink
         u = desk_leaf(skcfg, lk, s, v.shape[0])
         out.append(u.reshape(leaf.shape))
@@ -141,29 +178,32 @@ def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key):
 
 
 def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
-                                  key):
+                                  key, w_loc=None, den=None):
     """Plan-routed shard-local sketch, PER DEVICE inside shard_map.
 
     The static layout (``plan``, built once OUTSIDE the trace from the
     shard-local leaf shapes) replaces the per-leaf Python loop: the round's
     operator is derived ONCE (shared by sk and desk, per-leaf fold_in tags
     identical to the reference path), each local client row is packed into
-    one contiguous buffer and compressed in one fused pass, and the pmean
-    moves ONE (G_loc, b_total) payload.  Being trace-free state -- only the
-    round key is traced -- this is what lets the multi-round scan carry the
-    sketch path with zero per-round host work (DESIGN §8)."""
+    one contiguous buffer and compressed in one fused pass, and the collect
+    moves ONE (G_loc, b_total) payload.  A cohort mask (``w_loc``) fuses
+    into that same collective (masked weighted sum before the psum) and
+    shrinks the payload rows to the single cohort mean.  Being trace-free
+    state -- only the round key is traced -- this is what lets the
+    multi-round scan carry the sketch path with zero per-round host work
+    (DESIGN §8)."""
     rp = derive_round_params(plan, key)
     flat = jax.vmap(lambda t: pack_tree(plan, t))(deltas)   # (G_loc, d_loc)
     s = jax.vmap(lambda f: sk_flat(plan, rp, f))(flat)      # (G_loc, b_tot)
-    if client_axes:
-        s = jax.lax.pmean(s, client_axes)          # <-- compressed uplink
+    s = _collect(s, client_axes, w_loc, den)   # <-- compressed uplink
     u = jax.vmap(lambda p: desk_flat(plan, rp, p))(s)
     return jax.vmap(lambda f: unpack_tree(plan, f, cast=False))(u)
 
 
 def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
-                            topology: str = "cross_device", plan=None):
-    """Sketch each client delta (shard-local), pmean over client axes,
+                            topology: str = "cross_device", plan=None,
+                            part_mask=None):
+    """Sketch each client delta (shard-local), cohort-mean over client axes,
     desketch.
 
     deltas leaves: (G, *param_shape), G sharded over the client axes; param
@@ -173,7 +213,16 @@ def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
     runs through the fused packed engine (one dispatch, operator derived
     once); ``plan=None`` keeps the per-leaf reference loop.  Both produce
     identical values for shards below the layer-chunk threshold
-    (tests/test_mesh_scan.py pins this bitwise)."""
+    (tests/test_mesh_scan.py pins this bitwise).
+
+    ``part_mask`` (optional) is a repro.fed participation mask over the G
+    clients -- a (G,) 0/1 array, or the weighted dict form of
+    ``ImportanceParticipation``.  The mask is evaluated OUTSIDE the
+    shard_map (scan body); here its weight vector enters sharded over the
+    client axes and the aggregation becomes the masked cohort mean, fused
+    into the same single collective the unmasked path uses
+    (``core.safl.masked_psum_mean``).  An all-ones mask is pinned bitwise
+    to ``part_mask=None``."""
     client_axes = client_axes_of(mesh, topology)
     lead = client_axes if client_axes else None
     in_specs = jax.tree.map(
@@ -186,15 +235,27 @@ def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
     else:
         fn = functools.partial(_sketch_avg_desk_local, skcfg, client_axes)
 
-    def local(d, k):
-        upd = fn(d, k)
-        # fold the local client axis (size 1 when G == #client groups;
-        # mean over it otherwise)
+    if part_mask is None:
+        def local(d, k):
+            upd = fn(d, k)
+            # fold the local client axis (size 1 when G == #client groups;
+            # mean over it otherwise)
+            return jax.tree.map(lambda u: u.mean(axis=0), upd)
+
+        return shard_map(local, mesh=mesh,
+                         in_specs=(in_specs, P()), out_specs=out_specs,
+                         check_vma=False)(deltas, key)
+
+    w = mask_weights(part_mask)                              # (G,)
+    den = float(part_mask["den"]) if is_weighted_mask(part_mask) else None
+
+    def local_masked(d, k, wl):
+        upd = fn(d, k, wl, den)         # leaves (1, ...): the cohort mean
         return jax.tree.map(lambda u: u.mean(axis=0), upd)
 
-    return shard_map(local, mesh=mesh,
-                     in_specs=(in_specs, P()), out_specs=out_specs,
-                     check_vma=False)(deltas, key)
+    return shard_map(local_masked, mesh=mesh,
+                     in_specs=(in_specs, P(), P(lead)), out_specs=out_specs,
+                     check_vma=False)(deltas, key, w)
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +301,35 @@ def client_deltas_sharded(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
             deltas, losses = jax.vmap(one)(batch)
         return deltas, losses
 
+    if not _NEW_SHARD_MAP or _FORCE_VMAP_CLIENT_DELTAS:
+        # jax 0.4.x: the partial-manual shard_map below hard-crashes the
+        # bundled XLA (IsManualSubgroup CHECK) as soon as a sharding hint
+        # appears inside the manual region.  The cross_silo-style vmap
+        # formulation runs the SAME per-client program -- identical
+        # fold_in/grad/reduction chain per client, clients independent, G
+        # sharded over the client axes by GSPMD instead of manually -- so
+        # trajectories match the shard_map path bitwise (asserted on the
+        # new stack, where both compile, by tests/test_mesh_scan.py); this
+        # is what lets the full mesh suite run on both jax stacks
+        # (ROADMAP: cross_device scan on jax 0.4.x).
+        vmap_haxes = ()
+        if topology == "cross_device_dp":
+            # the in-body hint (mb data-parallel over the model axis) moves
+            # outside the vmap: same spec, one leading G dim earlier; model-
+            # axis hints stay disabled so GSPMD can propagate batch-over-
+            # model freely, exactly like the shard_map body
+            vmap_haxes = ("model",)
+            batch = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, P(*((caxes, None, "model")
+                           + (None,) * (x.ndim - 3)))) if x.ndim >= 3 else x,
+                batch)
+        with manual_axes(vmap_haxes):
+            def one(mb):
+                return client_delta(safl_cfg, loss, params, mb, eta)
+            deltas, losses = jax.vmap(one)(batch)
+        return deltas, losses
+
     lead = P(caxes)
     b_specs = jax.tree.map(lambda x: lead, batch)
     d_specs = jax.tree.map(lambda x: lead, params)
@@ -263,11 +353,9 @@ def _mesh_pspecs(model_cfg: ModelConfig, topology: str):
     return abstract, pspecs
 
 
-def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
-                     topology: str = "cross_device"):
-    """The typed-key SAFL mesh round:
-    ``core(params, opt_state, batch, round_key) -> (params, opt_state,
-    loss)``.
+def _mesh_plan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+               topology: str):
+    """(abstract, pspecs, plan) for one mesh round family.
 
     The shard-local ``PackingPlan`` is built HERE, once, outside any trace
     (``core.packed.make_sharded_packing_plan``), so only the round operator
@@ -276,8 +364,7 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     carry.  Models with a local shard above ``SKETCH_CHUNK_NUMEL`` keep the
     per-leaf reference path instead (``plan=None``): its layer-chunked
     lax.map bounds the operator temporaries to one layer slice, which the
-    whole-leaf packed route would not.  ``make_safl_train_step`` wraps this
-    with the key_data calling convention; ``make_safl_scan_fn`` scans it."""
+    whole-leaf packed route would not."""
     from repro.core.packed import shard_local_abstract
     abstract, pspecs = _mesh_pspecs(model_cfg, topology)
     plan = None
@@ -287,34 +374,242 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                for l in jax.tree.leaves(local_abs)):
             plan = make_sharded_packing_plan(safl_cfg.sketch, abstract,
                                              pspecs, dict(mesh.shape))
+    return abstract, pspecs, plan
 
-    def core(params, opt_state, batch, key):
+
+def _buffer_specs(mesh, topology: str):
+    """Partition specs of the mesh staleness ring buffer.
+
+    ``buf`` is the global client-major payload ring -- generation dim
+    unsharded, client dim over the client axes, the packed payload dim over
+    every remaining mesh axis (each model/FSDP shard owns its slice of the
+    shard-local sketch, mirroring how the payload exists inside the sketch
+    shard_map).  ``bufw`` drops the payload dim."""
+    caxes = client_axes_of(mesh, topology)
+    other = tuple(a for a in mesh.axis_names if a not in caxes)
+    return (P(None, caxes, other if other else None), P(None, caxes)), caxes
+
+
+def init_mesh_async_state(model_cfg: ModelConfig, safl_cfg: SAFLConfig,
+                          acfg, mesh, params,
+                          topology: str = "cross_device") -> dict:
+    """Server opt state + the mesh staleness ring buffer (scan-carry
+    resident), for ``run_mesh_scan(..., buffer=acfg)`` /
+    ``make_safl_train_step(..., buffer=acfg)``.
+
+    The ring holds the last ``D = max_delay + 1`` generation rounds'
+    per-client ``(G, b_total)`` sketch payloads (sharded: clients over the
+    client axes, payload over the model/FSDP axes -- see
+    ``_buffer_specs``) plus the matching 0/1 cohort weights."""
+    _, _, plan = _mesh_plan(model_cfg, safl_cfg, mesh, topology)
+    if plan is None:
+        raise ValueError(
+            "the mesh staleness buffer stores packed (G, b_total) sketch "
+            "payloads: it needs the packed plan route (sketch.kind != "
+            "'none' and every local shard <= SKETCH_CHUNK_NUMEL)")
+    (buf_spec, bufw_spec), caxes = _buffer_specs(mesh, topology)
+    if not caxes:
+        raise ValueError("the mesh staleness buffer needs client mesh axes")
+    G = num_clients_of(mesh, topology)
+    n_other = 1
+    for a in mesh.axis_names:
+        if a not in caxes:
+            n_other *= mesh.shape[a]
+    D = acfg.buffer_rounds
+    buf = jax.device_put(
+        jnp.zeros((D, G, plan.b_total * n_other), jnp.float32),
+        NamedSharding(mesh, buf_spec))
+    bufw = jax.device_put(jnp.zeros((D, G), jnp.float32),
+                          NamedSharding(mesh, bufw_spec))
+    return {"opt": init_opt_state(safl_cfg.server, params),
+            "buf": buf, "bufw": bufw}
+
+
+def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
+                            buf, bufw, round_key, base_key, t,
+                            topology: str = "cross_device", part_mask=None):
+    """FedBuff-style staleness-buffered uplink on the mesh (DESIGN §9).
+
+    One shard_map over the whole mesh: sketch the local client rows with
+    round t's operator, push the ``(G_loc, b_total)`` payload (and the
+    round's cohort weights) into the ring slot ``t % D``, recompute every
+    generation's arrivals from the deterministic delay policy
+    (``fed.async_buffer.arrival_weight`` -- pure in (g, c, seed), nothing
+    stored but payloads), reduce each arriving generation in ITS OWN sketch
+    space, run ONE fused psum over the client axes for all generations'
+    partial sums, and desketch each generation with its own operator
+    re-derived from ``fold_in(base_key, g)`` INSIDE the shard_map
+    (``core.packed.derive_generation_params``).  Returns
+    ``(update_tree, buf, bufw)``.
+
+    With ``delay="zero"`` the d > 0 arrival groups are statically empty and
+    the round lowers to the synchronous masked path -- the bitwise parity
+    pin of tests/test_mesh_scan.py."""
+    from repro.fed.async_buffer import arrival_weight
+    if is_weighted_mask(part_mask):
+        raise TypeError(
+            "the mesh staleness buffer stores 0/1 cohort masks per "
+            "generation; weighted (importance-sampling) masks are not "
+            "supported -- use a 0/1 participation policy")
+    client_axes = client_axes_of(mesh, topology)
+    (buf_spec, bufw_spec), _ = _buffer_specs(mesh, topology)
+    if not client_axes:
+        raise ValueError("the mesh staleness buffer needs client mesh axes")
+    G = num_clients_of(mesh, topology)
+    D = acfg.buffer_rounds
+    lead = client_axes
+    in_specs = jax.tree.map(
+        lambda ps: P(*((lead,) + tuple(ps))), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def local(d_tree, buf, bufw, rk, base, t, w_loc):
+        rp_t = derive_round_params(plan, rk)
+        flat = jax.vmap(lambda tr: pack_tree(plan, tr))(d_tree)
+        sks = jax.vmap(lambda f: sk_flat(plan, rp_t, f))(flat) \
+            .astype(jnp.float32)                        # (G_loc, b_loc)
+        g_loc = sks.shape[0]
+        # global client ids of this shard's rows (row-major over the client
+        # axes, matching how shard_map splits the leading G dim)
+        cid = 0
+        for a in client_axes:
+            cid = cid * mesh.shape[a] + jax.lax.axis_index(a)
+        rows = cid * g_loc + jnp.arange(g_loc)
+        # -- push: generation t claims slot t % D (its previous tenant,
+        # generation t - D, fully drained by round t - 1) --
+        slot_t = jnp.mod(t, D)
+        buf = buf.at[slot_t].set(sks)
+        bufw = bufw.at[slot_t].set(w_loc)
+        # -- pop: per-generation shard-local partial sums; the d = 0 group
+        # reads the just-pushed sks/w_loc directly (CSE; with the "zero"
+        # delay policy the d > 0 groups are statically empty, so the round
+        # constant-folds to the synchronous masked program) --
+        weighted = []                   # (W_loc, S_loc, rp_g) per delay
+        for d in range(D):              # static: D is a config constant
+            g = t - d
+            if acfg.delay == "zero" and d > 0:
+                continue
+            if d == 0:
+                payload, w_in = sks, w_loc
+            else:
+                payload = buf[jnp.mod(g, D)]
+                w_in = bufw[jnp.mod(g, D)]
+            w = w_in * arrival_weight(acfg, g, d, G)[rows]
+            S_loc = jnp.sum(w[:, None] * payload, axis=0)   # (b_loc,)
+            rp_g = rp_t if d == 0 else derive_generation_params(plan, base, g)
+            weighted.append((jnp.sum(w), S_loc, rp_g))
+        # ONE fused collective for every generation's partial sums: D
+        # payloads of b_total floats -- still sketch-dimensional uplink
+        S_stack = jnp.stack([s for _, s, _ in weighted])
+        W_stack = jnp.stack([wd for wd, _, _ in weighted])
+        S_stack, W_stack = jax.lax.psum((S_stack, W_stack), client_axes)
+        W = jnp.sum(W_stack)
+        W_safe = jnp.where(W > 0, W, 1.0)   # no arrivals -> zero update
+        upd_flat = sum(desk_flat(plan, rp_g, S_stack[i] / W_safe)
+                       for i, (_, _, rp_g) in enumerate(weighted))
+        update = unpack_tree(plan, upd_flat, cast=False)
+        return update, buf, bufw
+
+    w = part_mask if part_mask is not None \
+        else jnp.ones((G,), jnp.float32)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(in_specs, buf_spec, bufw_spec, P(), P(), P(),
+                               P(lead)),
+                     out_specs=(pspecs, buf_spec, bufw_spec),
+                     check_vma=False)(deltas, buf, bufw, round_key, base_key,
+                                      t, w)
+
+
+def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
+                     topology: str = "cross_device", *, participation=None,
+                     buffer=None):
+    """The typed-key SAFL mesh round:
+    ``core(params, state, batch, round_key, **hook_kwargs) ->
+    (params, state, loss)``.
+
+    The static sketch layout comes from ``_mesh_plan`` (built once, outside
+    any trace); ``make_safl_train_step`` wraps this with the key_data
+    calling convention and ``make_safl_scan_fn`` scans it.  The repro.fed
+    hooks ride the same core for both drivers: ``participation`` masks the
+    server aggregation over the round's sampled cohort (mask evaluated by
+    the CALLER in the scan body, handed in as ``part_mask``), and
+    ``buffer`` (an ``fed.async_buffer.AsyncConfig``) swaps the synchronous
+    uplink for the mesh staleness ring buffer, with ``state`` the dict from
+    ``init_mesh_async_state`` and ``t``/``base_key`` threaded in by the
+    caller (``launch.driver.round_hook_kwargs``)."""
+    abstract, pspecs, plan = _mesh_plan(model_cfg, safl_cfg, mesh, topology)
+    G = num_clients_of(mesh, topology)
+    if participation is not None:
+        check_policy_clients(participation, G, "mesh driver")
+    if buffer is not None:
+        if safl_cfg.sketch.kind == "none":
+            raise ValueError("the staleness buffer aggregates in sketch "
+                             "space; fedopt (sketch.kind='none') cannot "
+                             "ride it")
+        if plan is None:
+            raise ValueError(
+                "the mesh staleness buffer needs the packed plan route "
+                "(every local shard <= SKETCH_CHUNK_NUMEL)")
+
+    def core(params, state, batch, key, *, t=None, base_key=None,
+             part_mask=None):
         eta = jnp.asarray(safl_cfg.client_lr, jnp.float32)
         deltas, losses = client_deltas_sharded(
             model_cfg, safl_cfg, mesh, topology, params, batch, eta)
+        if buffer is not None:
+            update, buf, bufw = sharded_sketch_buffered(
+                mesh, buffer, plan, pspecs, deltas, state["buf"],
+                state["bufw"], key, base_key, t, topology,
+                part_mask=part_mask)
+            params, opt = apply_update(
+                safl_cfg.server, state["opt"], params, update)
+            return (params, {"opt": opt, "buf": buf, "bufw": bufw},
+                    masked_mean(losses, part_mask))
         if safl_cfg.sketch.kind == "none":
             # FedOpt baseline: raw-delta mean = O(d) all-reduce over clients
-            update = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+            if part_mask is None:
+                update = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+            else:
+                update = masked_mean_tree(deltas, part_mask)
         else:
             update = sharded_sketch_avg_desk(
                 mesh, safl_cfg.sketch, pspecs, deltas, key, topology,
-                plan=plan)
-        params, opt_state = apply_update(
-            safl_cfg.server, opt_state, params, update)
-        return params, opt_state, jnp.mean(losses)
+                plan=plan, part_mask=part_mask)
+        params, state = apply_update(safl_cfg.server, state, params, update)
+        if part_mask is None:
+            return params, state, jnp.mean(losses)
+        return params, state, masked_mean(losses, part_mask)
 
     return core, pspecs
 
 
 def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
-                         topology: str = "cross_device"):
+                         topology: str = "cross_device", *,
+                         participation=None, buffer=None):
     """SAFL round on the mesh.  batch leaves: (G, K, mb, ...) with G = number
-    of FL clients (data-parallel groups or pods, per ``topology``)."""
-    core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology)
+    of FL clients (data-parallel groups or pods, per ``topology``).
 
-    def step(params, opt_state, batch, key_data):
-        return core(params, opt_state, batch,
-                    jax.random.wrap_key_data(key_data))
+    Without hooks the step keeps the PR-4 signature
+    ``step(params, opt_state, batch, key_data)`` where ``key_data`` is the
+    ROUND key's data.  With ``participation=``/``buffer=`` (repro.fed) the
+    step needs the absolute round index and the run's base key --
+    ``step(params, state, batch, base_key_data, t)`` -- and derives the
+    round key as ``fold_in(base, t)`` itself, the exact chain the scanned
+    driver uses; ``state`` is the ``init_mesh_async_state`` dict when
+    buffered."""
+    core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology,
+                                    participation=participation,
+                                    buffer=buffer)
+    if participation is None and buffer is None:
+        def step(params, opt_state, batch, key_data):
+            return core(params, opt_state, batch,
+                        jax.random.wrap_key_data(key_data))
+    else:
+        def step(params, state, batch, key_data, t):
+            base = jax.random.wrap_key_data(key_data)
+            kw, _ = round_hook_kwargs(t, base, None, participation,
+                                      buffer is not None)
+            return core(params, state, batch, jax.random.fold_in(base, t),
+                        **kw)
 
     return step, pspecs
 
@@ -328,10 +623,12 @@ def _fedopt_cfg(safl_cfg: SAFLConfig) -> SAFLConfig:
 
 
 def make_fedopt_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
-                           topology: str = "cross_device"):
+                           topology: str = "cross_device", *,
+                           participation=None, buffer=None):
     """Uncompressed FedOPT baseline: raw-delta mean = O(d) all-reduce."""
     return make_safl_train_step(model_cfg, _fedopt_cfg(safl_cfg), mesh,
-                                topology)
+                                topology, participation=participation,
+                                buffer=buffer)
 
 
 # ---------------------------------------------------------------------------
@@ -354,7 +651,8 @@ def mesh_sampler(mesh, sampler, topology: str = "cross_device"):
 
 def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                       topology: str = "cross_device", *, sampler,
-                      num_rounds: int, donate: bool = True):
+                      num_rounds: int, donate: bool = True,
+                      participation=None, buffer=None):
     """Jit ``num_rounds`` SAFL mesh rounds as ONE ``lax.scan`` dispatch.
 
     The scan sits OUTSIDE the shard_map round: each scanned step draws its
@@ -367,6 +665,14 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     host pays one dispatch + one metric fetch per chunk instead of per
     round.
 
+    ``participation``/``buffer`` are the repro.fed hooks
+    (``launch.driver.round_hook_kwargs``, DESIGN §9): the cohort mask is
+    evaluated IN THE SCAN BODY as a pure function of the absolute round
+    index and consumed inside the round's sketch shard_map; a buffered run
+    carries the staleness ring (``init_mesh_async_state``) in place of the
+    bare opt state, donated like every other carry leaf.  An all-ones mask
+    and a delay=0 buffer are pinned bitwise to the hookless scan.
+
     Signature of the returned fn:
         ``(params, opt_state, data_state, key_data, t0) ->
            (params, opt_state, data_state, key_data, hist)``
@@ -374,14 +680,20 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     executable; ``hist["loss"]`` is the chunk's on-device loss history.
     Returns ``(chunk_fn, pspecs)``.
     """
-    core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology)
+    core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology,
+                                    participation=participation,
+                                    buffer=buffer)
 
     def chunk(params, opt_state, data_state, key_data, t0):
         def body(carry, t):
             params, opt_state, dstate, kd = carry
             dstate, batch = sampler.sample(dstate, t)
-            rk = jax.random.fold_in(jax.random.wrap_key_data(kd), t)
-            params, opt_state, loss = core(params, opt_state, batch, rk)
+            base = jax.random.wrap_key_data(kd)
+            kw, _ = round_hook_kwargs(t, base, None, participation,
+                                      buffer is not None)
+            rk = jax.random.fold_in(base, t)
+            params, opt_state, loss = core(params, opt_state, batch, rk,
+                                           **kw)
             return (params, opt_state, dstate, kd), {"loss": loss}
 
         (params, opt_state, data_state, key_data), hist = jax.lax.scan(
@@ -395,27 +707,40 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
 
 def make_fedopt_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                         topology: str = "cross_device", *, sampler,
-                        num_rounds: int, donate: bool = True):
+                        num_rounds: int, donate: bool = True,
+                        participation=None, buffer=None):
     """Scanned uncompressed FedOPT mesh rounds (``sketch.kind == "none"``:
     the raw-delta O(d) all-reduce inside the same scan layout)."""
     return make_safl_scan_fn(model_cfg, _fedopt_cfg(safl_cfg), mesh,
                              topology, sampler=sampler,
-                             num_rounds=num_rounds, donate=donate)
+                             num_rounds=num_rounds, donate=donate,
+                             participation=participation, buffer=buffer)
 
 
 def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
                   params, opt_state, *, rounds: int, key,
                   topology: str = "cross_device", chunk_size: int = 0,
-                  start_round: int = 0, donate: bool = True, on_chunk=None):
+                  start_round: int = 0, donate: bool = True, on_chunk=None,
+                  participation=None, buffer=None):
     """Run ``rounds`` mesh rounds in scanned chunks (the multi-pod analogue
     of ``launch.driver.run_scan``).
 
     ``chunk_size`` bounds rounds per dispatch (0 = all in one); metrics
     cross to the host once per chunk and ``on_chunk(t_done, params,
     opt_state, chunk_hist)`` runs between chunks.  ``start_round`` resumes a
-    ``(t, key)`` checkpoint cursor mid-trajectory (every per-round stream is
-    a pure function of the absolute round index under ``key``).  Returns
-    ``(params, opt_state, history)`` with host-side
+    ``(t, key)`` checkpoint cursor mid-trajectory (every per-round stream --
+    data, cohorts, delays, sketch operators -- is a pure function of the
+    absolute round index under ``key``).
+
+    ``participation``/``buffer`` are the repro.fed hooks (DESIGN §9):
+    ``participation`` is a sampling policy whose per-round cohort mask is
+    evaluated in the scan body; ``buffer`` is an
+    ``fed.async_buffer.AsyncConfig``, in which case ``opt_state`` must be
+    the ``init_mesh_async_state`` dict (the staleness ring rides the
+    donated scan carry).  An all-ones mask / delay=0 buffer reproduce the
+    hookless trajectories bitwise (tests/test_mesh_scan.py).
+
+    Returns ``(params, opt_state, history)`` with host-side
     ``(rounds - start_round,)`` arrays."""
     chunk_size = int(chunk_size) or int(rounds)
     data_state = sampler.init_state()
@@ -431,7 +756,8 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
         if n not in compiled:   # tail chunk of a different length re-jits
             compiled[n], _ = make_safl_scan_fn(
                 model_cfg, safl_cfg, mesh, topology, sampler=sampler,
-                num_rounds=n, donate=donate)
+                num_rounds=n, donate=donate, participation=participation,
+                buffer=buffer)
         params, opt_state, data_state, _, hist = compiled[n](
             params, opt_state, data_state, jnp.asarray(kd_host),
             jnp.asarray(t, jnp.int32))
@@ -447,22 +773,36 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
 
 
 def run_mesh_host_loop(step, sampler, params, opt_state, *, rounds: int, key,
-                       start_round: int = 0, donate: bool = True):
+                       start_round: int = 0, donate: bool = True,
+                       participation=None, buffer=None):
     """One-jitted-dispatch-per-round mesh reference with the scanned
     driver's EXACT key/batch sequence: round t consumes
     ``key_data(fold_in(key, t))`` and ``sampler.sample(state, t)``.
     ``step`` is the per-round fn from ``make_safl_train_step`` /
     ``make_fedopt_train_step``.  benchmarks/run.py times this against
     ``run_mesh_scan`` (mesh/<algo> vs mesh/<algo>_scan); the trajectories
-    agree bitwise."""
+    agree bitwise.
+
+    With the repro.fed hooks, build ``step`` with the SAME
+    ``participation=``/``buffer=`` and pass them here too: the hooked step
+    takes ``(params, state, batch, base_key_data, t)`` and re-derives the
+    round key / cohort mask itself, so this loop feeds it the base key and
+    the absolute round index instead of the folded round key."""
     data_state = sampler.init_state()
     sample = jax.jit(sampler.sample)
     jstep = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    hooked = participation is not None or buffer is not None
+    kd_base = np.asarray(jax.random.key_data(key))
     losses = []
     for t in range(int(start_round), rounds):
         data_state, batch = sample(data_state, jnp.asarray(t, jnp.int32))
-        kd = jax.random.key_data(jax.random.fold_in(key, t))
-        params, opt_state, loss = jstep(params, opt_state, batch, kd)
+        if hooked:
+            params, opt_state, loss = jstep(
+                params, opt_state, batch, jnp.asarray(kd_base),
+                jnp.asarray(t, jnp.int32))
+        else:
+            kd = jax.random.key_data(jax.random.fold_in(key, t))
+            params, opt_state, loss = jstep(params, opt_state, batch, kd)
         losses.append(np.asarray(loss))            # blocks every round
     return params, opt_state, {"loss": np.stack(losses)}
 

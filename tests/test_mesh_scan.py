@@ -1,6 +1,6 @@
-"""Multi-pod scanned mesh driver (launch/train.py, DESIGN §8).
+"""Multi-pod scanned mesh driver (launch/train.py, DESIGN §8-§9).
 
-Pins the ISSUE 4 contracts on an 8-forced-CPU-device host mesh:
+Pins the ISSUE 4 + ISSUE 5 contracts on an 8-forced-CPU-device host mesh:
 
   * scanned mesh rounds (``run_mesh_scan``: one ``lax.scan`` OUTSIDE the
     shard_map round, donated (params, opt, data_state, key) carries) are
@@ -10,18 +10,23 @@ Pins the ISSUE 4 contracts on an 8-forced-CPU-device host mesh:
   * donation safety: chunk_size=1 rethreads every donated carry across
     dispatches without aliasing crashes;
   * the plan-routed shard-local sketch (``make_sharded_packing_plan`` +
-    packed sk/desk inside shard_map) equals the per-leaf reference loop.
+    packed sk/desk inside shard_map) equals the per-leaf reference loop;
+  * the repro.fed hooks (DESIGN §9): an all-ones participation mask and a
+    delay=0 staleness buffer are pinned BITWISE to the hookless PR-4
+    trajectories; masked/buffered scans match the hooked per-round loop
+    and are chunk-split invariant; weighted (importance) masks are
+    rejected by the mesh buffer path with a clear error.
 
 Device policy (DESIGN §5): the 8-device flag must NOT leak into the main
 suite, so when this module is collected on a single-device session it
 re-runs itself in a subprocess with
 ``--xla_force_host_platform_device_count=8`` (the mini-dry-run pattern);
 CI additionally runs the direct tests in a dedicated 8-device job step.
-cross_device cases need the jax>=0.6 stack -- partial-manual shard_map over
-the client axes hard-crashes the XLA bundled with jax 0.4.x
-(IsManualSubgroup CHECK; see tests/test_sharding_and_dryrun.py) -- while
-cross_silo (vmapped client deltas + full-manual sketch shard_map) runs on
-both stacks.
+Both topologies run on BOTH jax stacks: on jax 0.4.x (whose bundled XLA
+hard-crashes on the partial-manual client-delta shard_map,
+IsManualSubgroup CHECK) cross_device routes through the vmap fallback,
+which the new stack pins bitwise against the shard_map formulation
+(test_vmap_fallback_matches_shard_map).
 """
 
 import os
@@ -33,17 +38,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.launch.train as train_mod
 from repro.core.adaptive import AdaConfig
 from repro.core.packed import make_sharded_packing_plan
 from repro.core.safl import SAFLConfig, init_safl
 from repro.core.sketch import SketchConfig
 from repro.data import BigramLMData, LMDataConfig
+from repro.fed import (AsyncConfig, FixedCohort, FullParticipation,
+                       ImportanceParticipation, UniformParticipation)
 from repro.launch.mesh import _mesh
-from repro.launch.train import (_mesh_pspecs, make_fedopt_scan_fn,
-                                make_fedopt_train_step, make_safl_train_step,
-                                mesh_sampler, num_clients_of,
-                                run_mesh_host_loop, run_mesh_scan,
-                                sharded_sketch_avg_desk)
+from repro.launch.train import (_mesh_pspecs, init_mesh_async_state,
+                                make_fedopt_scan_fn, make_fedopt_train_step,
+                                make_safl_train_step, mesh_sampler,
+                                num_clients_of, run_mesh_host_loop,
+                                run_mesh_scan, sharded_sketch_avg_desk)
 from repro.models import ModelConfig, init_params
 from repro.models.sharding import use_mesh
 
@@ -52,13 +60,11 @@ NEW_SHARD_MAP = hasattr(jax, "shard_map")   # partial-manual needs jax>=0.6
 
 needs8 = pytest.mark.skipif(not ON_8, reason="needs 8 forced CPU devices")
 
+# both topologies run on both jax stacks: 0.4.x takes the cross_device vmap
+# fallback (launch/train.py, DESIGN §9) instead of partial-manual shard_map
 TOPOLOGIES = [
     pytest.param("cross_silo", id="cross_silo"),
-    pytest.param("cross_device", id="cross_device",
-                 marks=pytest.mark.skipif(
-                     not NEW_SHARD_MAP,
-                     reason="partial-manual shard_map hard-crashes the XLA "
-                            "bundled with jax 0.4.x (IsManualSubgroup)")),
+    pytest.param("cross_device", id="cross_device"),
 ]
 
 MODEL = ModelConfig(name="meshscan", arch_type="dense", num_layers=1,
@@ -217,6 +223,232 @@ def test_sharded_sketch_plan_route_matches_per_leaf(kind):
         pkd = jax.jit(lambda d, k: sharded_sketch_avg_desk(
             mesh, skcfg, pspecs, d, k, topology, plan=plan))(deltas, key)
     _assert_trees_equal(ref, pkd)
+
+
+# ---------------------------------------------------------------------------
+# repro.fed hooks on the mesh driver (ISSUE 5, DESIGN §9)
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_mesh_hooks_allones_mask_and_delay0_buffer_pin_bitwise(topology):
+    """The ISSUE 5 acceptance pin: ``run_mesh_scan(participation=...,
+    buffer=...)`` with an all-ones mask and a delay=0 buffer reproduces the
+    PR-4 hookless mesh trajectories bit for bit -- the masked cohort mean
+    lowers to the unmasked pmean and the d > 0 arrival groups constant-fold
+    away."""
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    key = jax.random.key(42)
+    with use_mesh(mesh):
+        p0, o0, h0 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology)
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology,
+                                   participation=FullParticipation(G))
+        acfg = AsyncConfig(max_delay=0, delay="zero")
+        p, _ = _fresh(cfg)
+        st = init_mesh_async_state(MODEL, cfg, acfg, mesh, p, topology)
+        p2, s2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, p, st, rounds=3,
+                                   key=key, topology=topology, buffer=acfg,
+                                   participation=FullParticipation(G))
+    np.testing.assert_array_equal(h0["loss"], h1["loss"])
+    _assert_trees_equal((p0, o0), (p1, o1))
+    np.testing.assert_array_equal(h0["loss"], h2["loss"])
+    _assert_trees_equal((p0, o0), (p2, s2["opt"]))
+
+
+@needs8
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_mesh_masked_scan_matches_hooked_host_loop_bitwise(topology):
+    """Partial cohorts on the mesh: the scanned driver and the hooked
+    per-round step (same policy, base key + round index calling convention)
+    agree bitwise, and the cohort actually changes the trajectory vs full
+    participation."""
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    pol = UniformParticipation(G, frac=0.5, seed=7)
+    key = jax.random.key(11)
+    with use_mesh(mesh):
+        step, _ = make_safl_train_step(MODEL, cfg, mesh, topology,
+                                       participation=pol)
+        p1, o1, h1 = run_mesh_host_loop(step, smp, *_fresh(cfg), rounds=3,
+                                        key=key, donate=False,
+                                        participation=pol)
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology,
+                                   participation=pol)
+        _, _, h0 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                 rounds=3, key=key, topology=topology)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal((p1, o1), (p2, o2))
+    assert not np.array_equal(h0["loss"], h2["loss"])
+
+
+@needs8
+def test_mesh_async_buffer_scan_matches_hooked_host_loop_bitwise():
+    """Real staleness on the mesh (stagger delays over a 3-deep ring): the
+    ring buffer lives in the donated scan carry and per-generation
+    desketching inside shard_map reproduces the hooked per-round loop
+    bitwise; delayed arrivals change the trajectory."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology)
+    acfg = AsyncConfig(max_delay=2, delay="stagger", staleness_alpha=0.5)
+    key = jax.random.key(3)
+
+    def fresh_async():
+        p, _ = _fresh(cfg)
+        return p, init_mesh_async_state(MODEL, cfg, acfg, mesh, p, topology)
+
+    with use_mesh(mesh):
+        step, _ = make_safl_train_step(MODEL, cfg, mesh, topology,
+                                       buffer=acfg)
+        p1, s1, h1 = run_mesh_host_loop(step, smp, *fresh_async(), rounds=4,
+                                        key=key, donate=False, buffer=acfg)
+        p2, s2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *fresh_async(),
+                                   rounds=4, key=key, topology=topology,
+                                   buffer=acfg)
+        _, _, h0 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                 rounds=4, key=key, topology=topology)
+    assert np.isfinite(h2["loss"]).all()
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal((p1, s1), (p2, s2))
+    assert not np.array_equal(h0["loss"], h2["loss"])
+
+
+@needs8
+def test_mesh_masked_scan_chunk_split_invariance():
+    """Chunked masked+buffered dispatch == one dispatch, bitwise: cohorts
+    and delays are pure functions of the absolute round index, and the ring
+    buffer rethreads through the donated carry across dispatches."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    pol = UniformParticipation(G, frac=0.5, seed=5)
+    acfg = AsyncConfig(max_delay=1, delay="stagger")
+    key = jax.random.key(9)
+
+    def run(chunk_size):
+        p, _ = _fresh(cfg)
+        st = init_mesh_async_state(MODEL, cfg, acfg, mesh, p, topology)
+        return run_mesh_scan(MODEL, cfg, mesh, smp, p, st, rounds=4,
+                             key=key, topology=topology, participation=pol,
+                             buffer=acfg, chunk_size=chunk_size)
+
+    with use_mesh(mesh):
+        p1, s1, h1 = run(0)
+        p2, s2, h2 = run(2)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal((p1, s1), (p2, s2))
+
+
+@needs8
+def test_mesh_cohort_of_one():
+    """Edge case: a single-client cohort on a (G, K) mesh -- the masked
+    denominator is 1, the trajectory stays finite, and FixedCohort selects
+    the same client every round (deterministic trajectory across runs)."""
+    topology = "cross_device"
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    pol = FixedCohort(G, clients=(1,))
+    key = jax.random.key(21)
+    with use_mesh(mesh):
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology,
+                                   participation=pol)
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology,
+                                   participation=pol)
+    assert np.isfinite(h1["loss"]).all()
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal((p1, o1), (p2, o2))
+
+
+@needs8
+def test_mesh_importance_uniform_probs_pins_to_uniform_policy():
+    """ImportanceParticipation's weighted dict masks ride the mesh masked
+    aggregation (static Horvitz-Thompson denominator inside the shard_map);
+    with uniform probs the tilt is the identity and the trajectory pins
+    bitwise to UniformParticipation."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    key = jax.random.key(13)
+    uni = UniformParticipation(G, frac=0.5, seed=3)
+    imp = ImportanceParticipation(G, probs=(1.0 / G,) * G, frac=0.5, seed=3)
+    with use_mesh(mesh):
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology,
+                                   participation=uni)
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology,
+                                   participation=imp)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal((p1, o1), (p2, o2))
+
+
+@needs8
+def test_mesh_buffer_rejects_weighted_masks():
+    """The mesh staleness buffer stores 0/1 cohort masks per generation;
+    an importance-sampling policy's weighted dict mask must be rejected at
+    trace time with a clear error, not silently mis-aggregated."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    imp = ImportanceParticipation(G, probs=(1.0 / G,) * G, frac=0.5, seed=3)
+    acfg = AsyncConfig(max_delay=1, delay="stagger")
+    with use_mesh(mesh):
+        p, _ = _fresh(cfg)
+        st = init_mesh_async_state(MODEL, cfg, acfg, mesh, p, topology)
+        with pytest.raises(TypeError, match="weighted.*masks"):
+            run_mesh_scan(MODEL, cfg, mesh, smp, p, st, rounds=2,
+                          key=jax.random.key(0), topology=topology,
+                          participation=imp, buffer=acfg)
+
+
+@needs8
+def test_mesh_buffer_guards():
+    """Build-time guards: fedopt (sketch.kind='none') cannot ride the
+    sketch-space buffer, and a policy built for the wrong client count is
+    rejected before any tracing."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology)
+    acfg = AsyncConfig(max_delay=1)
+    with use_mesh(mesh):
+        p, o = _fresh(cfg)
+        with pytest.raises(ValueError, match="sketch space"):
+            make_fedopt_scan_fn(MODEL, cfg, mesh, topology, sampler=smp,
+                                num_rounds=2, buffer=acfg)
+        with pytest.raises(ValueError, match="num_clients"):
+            run_mesh_scan(MODEL, cfg, mesh, smp, p, o, rounds=2,
+                          key=jax.random.key(0), topology=topology,
+                          participation=UniformParticipation(16, frac=0.5))
+
+
+@needs8
+@pytest.mark.skipif(not NEW_SHARD_MAP,
+                    reason="the shard_map side of the parity pair needs "
+                           "jax>=0.6 (0.4.x always takes the fallback)")
+def test_vmap_fallback_matches_shard_map():
+    """The jax-0.4.x cross_device client-delta fallback (vmap over the
+    client axis instead of partial-manual shard_map) is bitwise-identical
+    to the shard_map formulation -- asserted on the new stack, where both
+    compile.  This is what justifies running the whole mesh suite on both
+    stacks (DESIGN §9)."""
+    topology = "cross_device"
+    mesh, cfg, smp = _mk(topology)
+    key = jax.random.key(42)
+    with use_mesh(mesh):
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=2, key=key, topology=topology)
+        train_mod._FORCE_VMAP_CLIENT_DELTAS = True
+        try:
+            p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                       rounds=2, key=key, topology=topology)
+        finally:
+            train_mod._FORCE_VMAP_CLIENT_DELTAS = False
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal((p1, o1), (p2, o2))
 
 
 # ---------------------------------------------------------------------------

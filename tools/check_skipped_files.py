@@ -1,0 +1,73 @@
+"""Fail CI when any test FILE was skipped entirely.
+
+    python tools/check_skipped_files.py JUNIT.xml [JUNIT2.xml ...]
+
+Reads one or more pytest ``--junitxml`` reports and unions them: a test
+module counts as alive if ANY report ran at least one of its tests
+un-skipped.  A module whose every collected test is skipped in every
+report is a silently dead suite -- exactly the failure mode
+``pytest.importorskip`` (hypothesis), device-count gates, and jax-version
+gates can hide when an install step quietly stops providing a dependency.
+CI passes both the tier-1 session's report and the dedicated 8-device
+mesh session's, so ``tests/test_mesh_scan.py`` (device-gated in the
+single-device session by design) is judged by the session that can
+actually run it.
+"""
+
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+from collections import defaultdict
+
+
+def module_of(tc: ET.Element) -> str:
+    """junit testcase -> test module.  Normal cases carry the dotted module
+    in ``classname`` (drop trailing CamelCase class parts; this repo's
+    tests are module-level functions, so usually a no-op).  A module
+    skipped AT COLLECTION (e.g. a failed ``importorskip``) has an empty
+    classname and the module in ``name`` -- the very case this checker
+    exists to catch."""
+    classname = tc.get("classname", "") or tc.get("name", "")
+    parts = []
+    for c in classname.split("."):
+        if c[:1].isupper():
+            break
+        parts.append(c)
+    return ".".join(parts) or classname or "<unknown>"
+
+
+def tally(paths: list[str]) -> tuple[dict, dict]:
+    total: dict[str, int] = defaultdict(int)
+    ran: dict[str, int] = defaultdict(int)
+    for path in paths:
+        for tc in ET.parse(path).getroot().iter("testcase"):
+            mod = module_of(tc)
+            total[mod] += 1
+            if tc.find("skipped") is None:
+                ran[mod] += 1
+    return total, ran
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    total, ran = tally(argv)
+    if not total:
+        print("no testcases found in", argv)
+        return 1
+    dead = sorted(m for m in total if ran[m] == 0)
+    for mod in sorted(total):
+        print(f"{mod}: {ran[mod]}/{total[mod]} ran"
+              + ("   << ENTIRELY SKIPPED" if ran[mod] == 0 else ""))
+    if dead:
+        print(f"\n{len(dead)} test module(s) entirely skipped: "
+              f"{', '.join(dead)} -- a gate or optional dependency is "
+              "silently disabling coverage")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
