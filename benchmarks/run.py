@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
                           (paper Fig. 1, laptop-scale LM stand-in)
   fig1_participation    : partial participation (p0.25 cohorts) + FedBuff-
                           style async staleness rows on the scanned driver
+  fig1_faults           : deterministic fault injection + sketch-space
+                          sentinels (repro.fed.faults/robust, DESIGN §10)
   fig2_finetune         : finetuning regime comparison (paper Fig. 2)
   fig3_sketch_sizes     : convergence vs sketch size b (paper Fig. 3 / Fig. 6)
   table1_comm_bits      : per-round uplink bits per algorithm (paper Table 1)
@@ -45,7 +47,8 @@ from repro.core.safl import SAFLConfig, init_safl, safl_round
 from repro.core.sketch import (SketchConfig, desketch_tree, sk_leaf,
                                sketch_tree, total_sketch_bits)
 from repro.data import BigramLMData, LMDataConfig
-from repro.fed import (AsyncConfig, UniformParticipation, init_async_state,
+from repro.fed import (AsyncConfig, FaultConfig, SentinelConfig,
+                       UniformParticipation, init_async_state,
                        make_async_round)
 from repro.launch.driver import make_chunk_fn
 from repro.models import ModelConfig, init_params, loss_fn
@@ -149,7 +152,7 @@ def _setup(algo: str, sketch_ratio: float, rounds: int, seed: int):
 
 def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
            seed: int = 0, scan: bool = False, participation=None,
-           async_cfg=None):
+           async_cfg=None, faults=None, sentinel=None):
     """Train the bench model with one algorithm; returns (final_loss,
     us_per_round, uplink_bits_per_round).
 
@@ -189,11 +192,16 @@ def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
     if participation is not None:
         assert scan, "participation rows ride the scanned driver"
         bits = bits * participation.cohort_size
+    if sentinel is not None:
+        assert scan and algo in ("safl", "clipped")
+        round_fn = functools.partial(round_fn, sentinel=sentinel)
+    if faults is not None:
+        assert scan, "fault rows ride the scanned driver's hooks"
 
     if scan:
         chunk = make_chunk_fn(round_fn, sampler, rounds,
                               participation=participation,
-                              buffer=async_cfg is not None)
+                              buffer=async_cfg is not None, faults=faults)
 
         def run():
             p, s = fresh()
@@ -263,6 +271,25 @@ def fig1_participation():
     _emit("fig1/safl_async", us,
           f"final_loss={final:.4f};uplink_bits={bits};max_delay=2;"
           f"staleness_alpha=0.5;steady_state", final_loss=final)
+
+
+def fig1_faults():
+    """Fault-tolerant row (repro.fed.faults/robust, DESIGN §10): determin-
+    istic client faults (dropout-after-compute, NaN payloads, 1e3-scaled
+    Byzantine payloads, 5% each) injected into the scanned driver, with the
+    sketch-space sentinels rejecting the corrupted uplinks.  The guard chain
+    (faults -> sentinels -> participation mask -> one masked mean) rides the
+    same scan, so the row prices the full §10 fusion; the final loss is a
+    deterministic pin -- fault draws are fold_in streams of the round index,
+    so the guarded trajectory is exactly reproducible."""
+    faults = FaultConfig(num_clients=CLIENTS, drop_rate=0.05, nan_rate=0.05,
+                         byzantine_rate=0.05)
+    sent = SentinelConfig(norm_mult=10.0)
+    final, us, bits = _train("safl", scan=True, faults=faults, sentinel=sent)
+    _emit("fig1/safl_faults", us,
+          f"final_loss={final:.4f};uplink_bits={bits};"
+          f"drop/nan/byz=0.05each;norm_mult=10;steady_state",
+          final_loss=final)
 
 
 def fig2_finetune():
@@ -513,18 +540,33 @@ def mesh_rows():
               f"final_loss={final_a:.4f};max_delay=2;staleness_alpha=0.5;"
               f"steady_state", final_loss=final_a)
 
+        # fault injection + sketch-space sentinels on the scanned mesh
+        # driver (DESIGN §10): per-client faults drawn on every device from
+        # the same fold_in stream, sentinel validity agreed via one psum of
+        # two (G,) stats arrays, payload still aggregated by the ONE
+        # masked psum-mean.  Deterministic -- the final loss is a pin.
+        fts = FaultConfig(num_clients=G, drop_rate=0.05, nan_rate=0.05,
+                          byzantine_rate=0.05)
+        chunk_f, _ = make_safl_scan_fn(MODEL, cfg, mesh, topo, sampler=smp,
+                                       num_rounds=rounds, faults=fts,
+                                       sentinel=SentinelConfig(norm_mult=10.0))
+        final_f, us_f = scan_row(chunk_f, fresh_p)
+        _emit("mesh/safl_faults", us_f,
+              f"final_loss={final_f:.4f};drop/nan/byz=0.05each;norm_mult=10;"
+              f"steady_state", final_loss=final_f)
+
 
 def _guarded_row(name: str) -> bool:
     """Steady-state scanned rows only: fig1/*_scan and mesh/*_scan plus the
-    participation (_p{frac}) and async-buffer (_async) rows, which also run
-    as one on-device scan with compilation excluded.  The *.final_loss
-    convergence keys are pins, not times -- excluded from the 2x time
-    budget here; ``_perf_guard`` separately holds the guarded rows'
-    ``.final_loss`` keys to EXACT equality."""
+    participation (_p{frac}), async-buffer (_async) and fault-injection
+    (_faults) rows, which also run as one on-device scan with compilation
+    excluded.  The *.final_loss convergence keys are pins, not times --
+    excluded from the 2x time budget here; ``_perf_guard`` separately holds
+    the guarded rows' ``.final_loss`` keys to EXACT equality."""
     if name.endswith(".final_loss"):
         return False
     return (name.endswith("_scan") or name.endswith("_async")
-            or "_p0" in name)
+            or name.endswith("_faults") or "_p0" in name)
 
 
 def _perf_guard(prev: dict[str, float]) -> list[str]:
@@ -579,6 +621,7 @@ def main() -> None:
         fig3_sketch_sizes()
         fig1_resnet_scratch()
         fig1_participation()
+        fig1_faults()
         fig2_finetune()
         fig5_hessian_spectrum()
         sketch_ops()

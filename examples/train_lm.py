@@ -12,6 +12,14 @@ trajectory resumable: each chunk checkpoint stores the (t, key) cursor, and
 because every per-round stream (data, cohorts, delays, sketch operators) is
 a pure function of the absolute round index, a restart from the cursor
 replays the identical trajectory.
+
+Robustness (DESIGN.md §10): --faults 0.15 injects deterministic client
+faults (dropout-after-compute / NaN payloads / Byzantine scaling, rate/3
+each); --sentinel turns on the sketch-space payload sentinels that reject
+the corrupted uplinks; --max-retries 3 wraps the run in the
+checkpoint-rollback supervisor, which rolls a diverged span back to the
+last good (t, key) cursor and re-runs it under a rekeyed fault stream,
+printing the recovery log at exit.
 """
 import argparse
 import functools
@@ -26,9 +34,11 @@ from repro.core.packed import make_packing_plan
 from repro.core.safl import SAFLConfig, fedopt_round, init_safl, safl_round
 from repro.core.sketch import SketchConfig
 from repro.data import BigramLMData, LMDataConfig
-from repro.fed import AsyncConfig, UniformParticipation, init_async_state, \
-    make_async_round
+from repro.fed import AsyncConfig, FaultConfig, SentinelConfig, \
+    UniformParticipation, init_async_state, make_async_round
 from repro.launch.driver import run_scan
+from repro.launch.supervisor import SupervisorConfig, format_recovery_log, \
+    run_supervised
 from repro.models import ModelConfig, init_params, loss_fn
 from repro.optim import cosine
 
@@ -45,6 +55,19 @@ ap.add_argument("--participation-frac", type=float, default=1.0,
 ap.add_argument("--async-buffer", type=int, default=0, metavar="MAX_DELAY",
                 help="run the FedBuff-style staleness buffer with client "
                 "delays up to MAX_DELAY rounds (0 = synchronous)")
+ap.add_argument("--faults", type=float, default=0.0, metavar="RATE",
+                help="inject deterministic client faults at this total "
+                "rate, split RATE/3 each across dropout-after-compute, "
+                "NaN-corrupted payloads, and 1e3-scaled Byzantine payloads "
+                "(repro.fed.faults; 0 = fault-free)")
+ap.add_argument("--sentinel", action="store_true",
+                help="enable the sketch-space payload sentinels: per-"
+                "client finite checks + norm-outlier rejection folded "
+                "into the aggregation mask (repro.fed.robust)")
+ap.add_argument("--max-retries", type=int, default=0, metavar="N",
+                help="wrap the run in the checkpoint-rollback supervisor "
+                "with up to N rekeyed retries of a diverged span "
+                "(launch/supervisor.py; 0 = unsupervised)")
 ap.add_argument("--resume", action="store_true",
                 help="restart from --ckpt's (t, key) cursor and resume the "
                 "EXACT trajectory (pass the same model/algorithm flags): "
@@ -83,7 +106,11 @@ sched = cosine(args.rounds, warmup=10)
 if args.fedopt and args.async_buffer > 0:
     ap.error("--async-buffer is SAFL-only; drop --fedopt to run the "
              "staleness buffer")
+if args.fedopt and (args.faults > 0 or args.sentinel):
+    ap.error("--faults/--sentinel act on the packed sketch uplink; the "
+             "uncompressed FedOPT reference has no sketch payload")
 
+sentinel = SentinelConfig(norm_mult=10.0) if args.sentinel else None
 plan = make_packing_plan(safl.sketch, params)
 async_cfg = None
 if args.fedopt:
@@ -95,6 +122,18 @@ elif args.async_buffer > 0:
                            data.cfg.num_clients)
 else:
     round_fn = functools.partial(safl_round, safl, loss, plan=plan)
+if sentinel is not None:
+    # static config: binds like plan=, not a traced kwarg (DESIGN.md §10)
+    round_fn = functools.partial(round_fn, sentinel=sentinel)
+
+faults = None
+if args.faults > 0:
+    r = args.faults / 3.0
+    faults = FaultConfig(num_clients=data.cfg.num_clients, drop_rate=r,
+                         nan_rate=r, byzantine_rate=r)
+    print(f"fault injection: total rate {args.faults} "
+          f"(drop/NaN/Byzantine {r:.3f} each)"
+          + ("" if args.sentinel else " -- UNGUARDED, pass --sentinel"))
 
 participation = None
 if args.participation_frac < 1.0:
@@ -126,23 +165,41 @@ if args.resume:
 
 def on_chunk(t_done, p, o, hist):
     print(f"round {t_done - 1:4d}  loss {hist['loss'][-1]:.4f}")
-    if t_done < args.rounds:
+    if args.max_retries == 0 and t_done < args.rounds:
         # resumable cursor: (t, key) pins where the trajectory restarts --
         # data, cohort masks, delays and sketch operators are all pure
-        # functions of the absolute round index under this key
+        # functions of the absolute round index under this key.  (The
+        # supervisor owns checkpointing when it is on: it must record the
+        # REKEYED cursor of a retried span, not this run key.)
         save_checkpoint(args.ckpt, {"params": p, "opt": o,
                                     "cursor": {"t": jnp.asarray(t_done),
                                                "key": jax.random.key_data(key)}},
                         step=t_done)
 
 
-params, opt, hist = run_scan(
-    round_fn, sampler, params, opt, rounds=args.rounds, key=key,
-    chunk_size=100, kwargs_fn=lambda t: {"lr_scale": sched(t)},
-    on_chunk=on_chunk, participation=participation,
-    buffer=async_cfg is not None, start_round=start_round)
-save_checkpoint(args.ckpt, {"params": params, "opt": opt,
-                            "cursor": {"t": jnp.asarray(args.rounds),
-                                       "key": jax.random.key_data(key)}},
-                step=args.rounds)
+if args.max_retries > 0:
+    def launch(p, o, *, key, start_round, on_chunk):
+        return run_scan(
+            round_fn, sampler, p, o, rounds=args.rounds, key=key,
+            chunk_size=100, kwargs_fn=lambda t: {"lr_scale": sched(t)},
+            on_chunk=on_chunk, participation=participation,
+            buffer=async_cfg is not None, faults=faults,
+            start_round=start_round)
+
+    params, opt, hist, recovery = run_supervised(
+        launch, params, opt, rounds=args.rounds, key=key,
+        config=SupervisorConfig(max_retries=args.max_retries),
+        on_chunk=on_chunk, ckpt_path=args.ckpt, start_round=start_round)
+    print(format_recovery_log(recovery))
+else:
+    params, opt, hist = run_scan(
+        round_fn, sampler, params, opt, rounds=args.rounds, key=key,
+        chunk_size=100, kwargs_fn=lambda t: {"lr_scale": sched(t)},
+        on_chunk=on_chunk, participation=participation,
+        buffer=async_cfg is not None, faults=faults,
+        start_round=start_round)
+    save_checkpoint(args.ckpt, {"params": params, "opt": opt,
+                                "cursor": {"t": jnp.asarray(args.rounds),
+                                           "key": jax.random.key_data(key)}},
+                    step=args.rounds)
 print("checkpoint saved to", args.ckpt + ".npz")

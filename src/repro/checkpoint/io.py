@@ -24,7 +24,13 @@ def _paths(tree: Pytree) -> list[tuple[str, Any]]:
 
 
 def save_checkpoint(path: str, tree: Pytree, step: int = 0) -> None:
-    """Save a pytree (params/opt state/server moments) to ``path``.npz."""
+    """Save a pytree (params/opt state/server moments) to ``path``.npz.
+
+    Writes are ATOMIC (tmp file + ``os.replace``), npz before manifest: a
+    crash mid-save leaves either the previous checkpoint pair intact or a
+    new npz with the old manifest -- never a torn npz a restart would then
+    try to restore.  This is what lets the rollback supervisor
+    (``launch/supervisor.py``) trust the last on-disk cursor."""
     os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
     arrays = {}
     manifest = {"step": step, "leaves": []}
@@ -39,9 +45,13 @@ def save_checkpoint(path: str, tree: Pytree, step: int = 0) -> None:
         arrays[key] = arr
         manifest["leaves"].append(
             {"path": spath, "key": key, "dtype": dtype})
-    np.savez(path + ".npz", **arrays)
-    with open(path + ".json", "w") as f:
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path + ".npz")
+    tmp = path + ".tmp.json"
+    with open(tmp, "w") as f:
         json.dump(manifest, f)
+    os.replace(tmp, path + ".json")
 
 
 def restore_checkpoint(path: str, like: Pytree) -> tuple[Pytree, int]:

@@ -51,12 +51,16 @@ def clip_delta(cfg: ClippedSAFLConfig, delta: Pytree) -> Pytree:
 def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
                        params: Pytree, opt_state: dict, batch: Pytree,
                        round_key: jax.Array, *,
-                       plan=None, part_mask=None) -> tuple[Pytree, dict, dict]:
+                       plan=None, part_mask=None, fault_spec=None,
+                       sentinel=None) -> tuple[Pytree, dict, dict]:
     """One SAFL round with per-client delta clipping (heavy-tail defense).
 
-    batch leaves: (G, K, mb, ...) as in safl_round; ``plan`` and
-    ``part_mask`` as in safl_round (plan built once by multi-round callers;
-    the mask restricts the server mean to the sampled cohort)."""
+    batch leaves: (G, K, mb, ...) as in safl_round; ``plan``/``part_mask``/
+    ``fault_spec``/``sentinel`` as in safl_round (plan built once by
+    multi-round callers; the mask restricts the server mean to the sampled
+    cohort; faults and sentinels fuse into it per DESIGN.md §10 -- client
+    clipping bounds honest heavy tails, the sentinel handles adversarially
+    broken payloads, so SACFL composes both defenses)."""
     base = cfg.base
     eta = jnp.asarray(base.client_lr, jnp.float32)
 
@@ -69,7 +73,18 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
         plan = make_packing_plan(base.sketch, params)
     rp = derive_round_params(plan, round_key)
     sketches = sk_packed_clients(plan, rp, deltas)
+    counters = {}
+    if fault_spec is not None or sentinel is not None:
+        from repro.fed.robust import guard_uplink
+        sketches, part_mask, counters = guard_uplink(
+            sketches, part_mask, fault_spec, sentinel)
     mbar = masked_mean(sketches, part_mask)
     update = desk_packed(plan, rp, mbar)
-    params, opt_state = apply_update(base.server, opt_state, params, update)
-    return params, opt_state, {"loss": masked_mean(losses, part_mask)}
+    new_params, new_opt = apply_update(base.server, opt_state, params, update)
+    loss = masked_mean(losses, part_mask)
+    if sentinel is not None:
+        from repro.fed.robust import carry_if_empty, divergence_flag
+        new_params, new_opt = carry_if_empty(
+            part_mask, (new_params, new_opt), (params, opt_state))
+        counters = {**counters, "diverged": divergence_flag(sentinel, loss)}
+    return new_params, new_opt, {"loss": loss, **counters}

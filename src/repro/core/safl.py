@@ -168,7 +168,8 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                opt_state: dict, batch: Pytree, round_key: jax.Array,
                eta_scale: jax.Array | float = 1.0,
                lr_scale: jax.Array | float = 1.0, *,
-               plan=None, part_mask=None) -> tuple[Pytree, dict, dict]:
+               plan=None, part_mask=None, fault_spec=None,
+               sentinel=None) -> tuple[Pytree, dict, dict]:
     """One full SAFL round over all clients.
 
     ``batch`` leaves are shaped (G, K, mb, ...): G clients (sharded over the
@@ -179,7 +180,11 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     depends on ``round_key``.  ``part_mask`` (optional, (G,)) restricts the
     server aggregation to the round's sampled cohort (repro.fed): the sketch
     mean divides by the SAMPLED cohort size; an all-ones mask is bitwise the
-    full-participation path.  Returns (params, opt_state, metrics).
+    full-participation path.  ``fault_spec`` (traced, from
+    ``fed.faults.*.spec``) injects payload faults and ``sentinel`` (static
+    ``fed.robust.SentinelConfig``, threaded like ``plan`` via partial)
+    rejects bad payloads before aggregation -- the faults -> sentinels ->
+    mask fusion of DESIGN.md §10.  Returns (params, opt_state, metrics).
     """
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
 
@@ -196,6 +201,15 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     rp = derive_round_params(plan, round_key)
     sketches = sk_packed_clients(plan, rp, deltas)
 
+    # --- fault injection + sentinel rejection, both in sketch space; the
+    # survivors' weights land in the SAME mask the cohort mean already
+    # consumes (lazy import: repro.fed imports this module) ---
+    counters = {}
+    if fault_spec is not None or sentinel is not None:
+        from repro.fed.robust import guard_uplink
+        sketches, part_mask, counters = guard_uplink(
+            sketches, part_mask, fault_spec, sentinel)
+
     # --- server: average of sketches == sketch of average (Property 1).
     # Under GSPMD this mean over the client axis is the ONLY cross-client
     # collective, and it moves b_total floats, not d.  Under partial
@@ -206,22 +220,36 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     # --- desk back to R^d and run ADA_OPT (Alg. 2); deterministic, so every
     # replica/client replays the identical server step. ---
     update = desk_packed(plan, rp, mbar)
-    params, opt_state = apply_update(cfg.server, opt_state, params, update,
-                                     lr_scale=lr_scale)
+    new_params, new_opt = apply_update(cfg.server, opt_state, params, update,
+                                       lr_scale=lr_scale)
 
-    metrics = {"loss": masked_mean(losses, part_mask)}
-    return params, opt_state, metrics
+    loss = masked_mean(losses, part_mask)
+    if sentinel is not None:
+        from repro.fed.robust import carry_if_empty, divergence_flag
+        new_params, new_opt = carry_if_empty(
+            part_mask, (new_params, new_opt), (params, opt_state))
+        counters = {**counters, "diverged": divergence_flag(sentinel, loss)}
+
+    metrics = {"loss": loss, **counters}
+    return new_params, new_opt, metrics
 
 
 def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                  opt_state: dict, batch: Pytree, round_key: jax.Array,
                  eta_scale: jax.Array | float = 1.0,
                  lr_scale: jax.Array | float = 1.0, *,
-                 part_mask=None) -> tuple[Pytree, dict, dict]:
+                 part_mask=None, fault_spec=None,
+                 sentinel=None) -> tuple[Pytree, dict, dict]:
     """Uncompressed FedOPT (Reddi et al. 2020) round: the paper's
     'ambient-dimension' reference line (legend 4e7 / 1e8).  Identical to
     safl_round with the identity compressor -- clients uplink raw deltas,
     i.e. the mean below all-reduces O(d) floats."""
+    if fault_spec is not None or sentinel is not None:
+        raise ValueError(
+            "fault injection / payload sentinels act on the packed sketch "
+            "uplink (fed.faults / fed.robust); the uncompressed FedOPT "
+            "baseline has no sketch payload -- run them on the SAFL/SACFL "
+            "rounds")
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
     deltas, losses = jax.vmap(
         lambda mb: client_delta(cfg, loss_fn, params, mb, eta))(batch)

@@ -1,9 +1,15 @@
-"""Client participation subsystem: partial participation, async staleness
-buffers, and sampling policies for the on-device scan driver (DESIGN.md §7).
+"""Client participation + robustness subsystem: partial participation,
+async staleness buffers, sampling policies, deterministic fault injection
+and sketch-space payload sentinels for the on-device scan driver
+(DESIGN.md §7, §10).
 """
 
 from repro.fed.async_buffer import (AsyncConfig, arrival_weight,
                                     init_async_state, make_async_round)
+from repro.fed.faults import (BYZANTINE, DROP, INF, NAN, OK, FaultConfig,
+                              FaultTable, corrupt_payload, fold_arrivals)
+from repro.fed.robust import (SentinelConfig, carry_if_empty,
+                              divergence_flag, guard_uplink, masked_median)
 from repro.fed.participation import (AvailabilityTrace, FixedCohort,
                                      FullParticipation,
                                      ImportanceParticipation,

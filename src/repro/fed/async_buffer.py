@@ -169,7 +169,8 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
     D = acfg.buffer_rounds
 
     def round_fn(params, state, batch, round_key, *, t, base_key,
-                 part_mask=None, lr_scale=1.0):
+                 part_mask=None, lr_scale=1.0, fault_spec=None,
+                 sentinel=None):
         eta = jnp.asarray(base.client_lr, jnp.float32)
 
         def one_client(mb):
@@ -188,9 +189,18 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
         mask = jnp.ones((G,), jnp.float32) if part_mask is None else part_mask
 
         # -- push: generation t's payloads claim slot t % D (its previous
-        # tenant, generation t - D, fully drained by round t - 1) --
+        # tenant, generation t - D, fully drained by round t - 1).  Faults
+        # corrupt the payload and sentinels vet it BEFORE the push (DESIGN.md
+        # §10): the buffer must never store a poisoned row, or it would
+        # re-emit it at every later pop of that generation; a dropped or
+        # rejected client stores weight 0, exactly like non-participation. --
         rp_t = derive_round_params(plan, round_key)
         sks = sk_packed_clients(plan, rp_t, deltas).astype(jnp.float32)
+        counters = {}
+        if fault_spec is not None or sentinel is not None:
+            from repro.fed.robust import guard_uplink
+            sks, mask, counters = guard_uplink(
+                sks, mask, fault_spec, sentinel)
         slot_t = jnp.mod(t, D)
         buf = state["buf"].at[slot_t].set(sks)
         bufw = state["bufw"].at[slot_t].set(mask)
@@ -227,10 +237,20 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
                           for _, S_d, rp_g in weighted)
         update = unpack_tree(plan, update_flat)
 
-        params, opt = apply_update(base.server, state["opt"], params, update,
-                                   lr_scale=lr_scale)
-        metrics = {"loss": masked_mean(losses, part_mask),
-                   "arrival_weight": W}
-        return params, {"opt": opt, "buf": buf, "bufw": bufw}, metrics
+        new_params, opt = apply_update(base.server, state["opt"], params,
+                                       update, lr_scale=lr_scale)
+        loss = masked_mean(losses, part_mask)
+        if sentinel is not None:
+            # a no-arrival round under sentinels carries the server through
+            # unchanged (the zero-pseudo-gradient legacy semantics would
+            # still decay the adaptive moments); W is the scalar select.
+            from repro.fed.robust import divergence_flag
+            new_params, opt = jax.tree.map(
+                lambda n, o: jnp.where(W > 0, n, o),
+                (new_params, opt), (params, state["opt"]))
+            counters = {**counters,
+                        "diverged": divergence_flag(sentinel, loss)}
+        metrics = {"loss": loss, "arrival_weight": W, **counters}
+        return new_params, {"opt": opt, "buf": buf, "bufw": bufw}, metrics
 
     return round_fn

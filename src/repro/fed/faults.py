@@ -1,0 +1,207 @@
+"""Deterministic, scan-compatible client fault injection (DESIGN.md §10).
+
+The participation layer (``fed/participation.py``) decides who is *sampled*;
+this module decides what the sampled clients' payloads look like when they
+misbehave.  Three fault families, all applied in sketch space to the
+``(G, b_total)`` uplink payload -- the server only ever sees sketches, so
+corruption of the transported representation is the honest fault model:
+
+* **dropout-after-compute** -- the client trained and sketched, but its
+  payload never arrives (straggler timeout, lost uplink).  Folds into the
+  aggregation mask exactly like non-participation.
+* **NaN / Inf corruption** -- a client uplinks a poisoned payload (local
+  divergence, bit rot in transit).  Without a sentinel this poisons the
+  cohort mean; ``fed.robust`` rejects it per-client.
+* **Byzantine scaling** -- a client uplinks its sketch scaled by a large
+  factor (model-boosting attack, bad local LR).  Finite, so it passes the
+  finite-check; the norm-outlier sentinel is what catches it.
+
+Same contract as the participation policies: every draw is a pure function
+of ``fold_in(fold_in(fold_in(stream_key, t), c))`` for absolute round index
+t and client c, so fault patterns are identical under chunk splits, the
+host-loop reference, and ``(t, key)`` cursor resume.
+
+**Transient vs persistent faults.**  By default (``persistent=False``) the
+fault stream is keyed off the RUN key (the ``key=`` of ``run_scan`` /
+``run_mesh_scan``, threaded here by the driver's ``round_hook_kwargs``).
+When the checkpoint-rollback supervisor (``launch/supervisor.py``) retries a
+diverged span with a rekeyed run key, the faults are redrawn -- the
+transient-fault model where a retry can escape the bad round.
+``persistent=True`` keys the stream off the config's own seed only, so the
+same faults re-fire on every retry: the model for deterministic poison, and
+the test path for the supervisor's bounded-retry exhaustion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_FAULT_STREAM_TAG = 104729   # decorrelates the fault stream from the data
+                             # sampler / cohort / delay fold_in chains
+
+# fault codes for FaultTable rows
+OK, DROP, NAN, INF, BYZANTINE = 0, 1, 2, 3, 4
+
+
+def _spec_from_codes(codes: jax.Array, byzantine_scale: float) -> dict:
+    """Lower per-client int fault codes to the traced fault spec.
+
+    The spec is a dict of (G,) arrays consumed by ``corrupt_payload`` /
+    ``fold_arrivals``: ``arrive`` (f32 0/1 -- payload reaches the server),
+    ``nan``/``inf`` (bool corruption flags) and ``scale`` (f32 multiplier,
+    1.0 for honest clients).  A no-fault spec is exactly neutral: multiply
+    by 1.0 and ``where(False, ., x)`` are bitwise identities, and an
+    all-ones ``arrive`` folds into the mask as ``m * 1.0 = m``.
+    """
+    codes = codes.astype(jnp.int32)
+    return {
+        "arrive": (codes != DROP).astype(jnp.float32),
+        "nan": codes == NAN,
+        "inf": codes == INF,
+        "scale": jnp.where(codes == BYZANTINE,
+                           jnp.float32(byzantine_scale), jnp.float32(1.0)),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Bernoulli per-(round, client) fault draws.
+
+    Each client-round draws one uniform u in [0, 1) and lands in the first
+    matching interval: ``[0, drop)`` -> dropout-after-compute,
+    ``[drop, drop+nan)`` -> NaN payload, then Inf, then Byzantine scaling;
+    the remainder is honest.  Faults fire only for rounds in
+    ``[start, stop)`` (``stop=None`` = forever) -- a bounded fault window is
+    how tests force a mid-run divergence at a known round.
+    """
+    num_clients: int
+    drop_rate: float = 0.0
+    nan_rate: float = 0.0
+    inf_rate: float = 0.0
+    byzantine_rate: float = 0.0
+    byzantine_scale: float = 1e3
+    start: int = 0
+    stop: int | None = None
+    persistent: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.num_clients >= 1
+        rates = (self.drop_rate, self.nan_rate, self.inf_rate,
+                 self.byzantine_rate)
+        assert all(0.0 <= r <= 1.0 for r in rates)
+        assert sum(rates) <= 1.0, "fault rates must sum to <= 1"
+        assert self.byzantine_scale > 0.0
+        assert self.start >= 0
+        assert self.stop is None or self.stop >= self.start
+
+    def spec(self, t: jax.Array, base_key: jax.Array) -> dict:
+        """The round-t fault spec (see ``_spec_from_codes``); pure in
+        (t, client, seed[, base_key]) so scan, host loop and resumed runs
+        draw identical faults."""
+        if self.persistent:
+            key0 = jax.random.fold_in(jax.random.key(self.seed),
+                                      _FAULT_STREAM_TAG)
+        else:
+            key0 = jax.random.fold_in(base_key,
+                                      _FAULT_STREAM_TAG + self.seed)
+        key_t = jax.random.fold_in(key0, t)
+        u = jax.vmap(lambda c: jax.random.uniform(
+            jax.random.fold_in(key_t, c)))(jnp.arange(self.num_clients))
+
+        active = t >= self.start
+        if self.stop is not None:
+            active = active & (t < self.stop)
+
+        d = self.drop_rate
+        n = d + self.nan_rate
+        i = n + self.inf_rate
+        b = i + self.byzantine_rate
+        drop = (u < d) & active
+        nan = (u >= d) & (u < n) & active
+        inf = (u >= n) & (u < i) & active
+        byz = (u >= i) & (u < b) & active
+        return {
+            "arrive": 1.0 - drop.astype(jnp.float32),
+            "nan": nan,
+            "inf": inf,
+            "scale": jnp.where(byz, jnp.float32(self.byzantine_scale),
+                               jnp.float32(1.0)),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTable:
+    """Explicit scripted faults: ``codes[t][c]`` is client c's fault code in
+    round t (``faults.OK/DROP/NAN/INF/BYZANTINE``).  Rounds beyond the table
+    are fault-free (or wrap, with ``cyclic=True``).  This is the property-
+    test workhorse: any fault pattern hypothesis generates is a table."""
+    codes: tuple
+    byzantine_scale: float = 1e3
+    cyclic: bool = False
+
+    def __post_init__(self):
+        assert len(self.codes) >= 1
+        widths = {len(r) for r in self.codes}
+        assert len(widths) == 1, "ragged fault table"
+        flat = [c for row in self.codes for c in row]
+        assert all(OK <= c <= BYZANTINE for c in flat)
+        assert self.byzantine_scale > 0.0
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.codes[0])
+
+    def spec(self, t: jax.Array, base_key: jax.Array) -> dict:
+        del base_key    # scripted faults are persistent by construction
+        tbl = jnp.asarray(self.codes, jnp.int32)
+        P = tbl.shape[0]
+        if self.cyclic:
+            row = tbl[jnp.mod(t, P)]
+        else:
+            # rounds past the script read an appended all-OK row
+            tbl = jnp.concatenate(
+                [tbl, jnp.zeros((1, self.num_clients), jnp.int32)])
+            row = tbl[jnp.minimum(t, P)]
+        return _spec_from_codes(row, self.byzantine_scale)
+
+
+def corrupt_payload(spec: dict, payloads: jax.Array) -> jax.Array:
+    """Apply the spec's corruption to a ``(G, b)`` (or shard-local
+    ``(G_loc, b)`` with matching spec rows) sketch payload.  Scaling first,
+    then NaN/Inf replacement; the no-fault spec is a bitwise identity
+    (multiply by 1.0, ``where`` on all-False)."""
+    s = payloads * spec["scale"][:, None].astype(payloads.dtype)
+    s = jnp.where(spec["nan"][:, None], jnp.asarray(jnp.nan, s.dtype), s)
+    s = jnp.where(spec["inf"][:, None], jnp.asarray(jnp.inf, s.dtype), s)
+    return s
+
+
+def take_rows(spec: dict, rows: jax.Array) -> dict:
+    """Slice a global (G,) fault spec down to a shard's client rows."""
+    return {k: v[rows] for k, v in spec.items()}
+
+
+def fold_arrivals(spec: dict, part_mask):
+    """Fold dropout-after-compute into the aggregation mask: the effective
+    weight of a dropped client is 0, exactly as if it had not been sampled.
+    Weighted (Horvitz-Thompson) masks keep their static denominator -- a
+    dropped draw is a lost sample, the estimator stays unbiased in the
+    participation randomness but sees the fault as variance."""
+    arrive = spec["arrive"]
+    if part_mask is None:
+        return arrive
+    if isinstance(part_mask, dict):
+        return {**part_mask, "w": part_mask["w"] * arrive}
+    return part_mask * arrive
+
+
+def n_dropped(spec: dict, part_mask) -> jax.Array:
+    """Count of sampled clients whose payload never arrived this round."""
+    from repro.core.safl import mask_weights
+    w0 = (jnp.ones_like(spec["arrive"]) if part_mask is None
+          else mask_weights(part_mask))
+    return jnp.sum((w0 > 0) * (1.0 - spec["arrive"]))

@@ -1,0 +1,191 @@
+"""Sketch-space payload sentinels: graceful degradation before aggregation.
+
+The server's one structural advantage over arbitrary client misbehavior is
+that every uplink arrives in the SAME compressed representation -- a row of
+the ``(G, b_total)`` packed sketch payload.  That makes per-client
+validation O(G * b_total), independent of the model dimension d, and lets
+rejection reuse the participation machinery: a rejected client is folded
+into the ``masked_mean`` / ``masked_psum_mean`` mask with weight 0, so the
+mesh path still pays exactly one payload-sized psum (DESIGN.md §10).
+
+Fusion order (the §10 contract): **faults -> sentinels -> participation
+mask -> one psum**.  Faults corrupt the payload and knock dropped clients
+out of the mask (``fed.faults``); the sentinels then
+
+1. **finite-check** each payload row and zero rejected rows (``masked_mean``
+   computes ``sum(x * m)``, and IEEE ``0 * NaN = NaN`` -- masking alone does
+   NOT contain a poisoned row, the payload must be zeroed too);
+2. optionally reject **norm outliers**: rows whose squared sketch norm
+   exceeds ``norm_mult^2`` times the cohort's (lower) median squared norm --
+   by sketch norm preservation (the paper's subspace embedding property,
+   DESIGN.md §1) an honestly-scaled delta cannot blow up its sketch, so a
+   Byzantine-scaled payload is visible in sketch space.  Median-based, so it
+   tolerates strictly less than half the cohort misbehaving (the classic
+   breakdown point);
+3. carry server params/opt through UNCHANGED when the surviving cohort is
+   empty (an all-zero masked mean is NOT a no-op for an adaptive server:
+   moment decay would still move the iterate);
+4. flag **loss divergence** (non-finite, or above ``divergence``) into the
+   chunked metric history -- the signal the rollback supervisor
+   (``launch/supervisor.py``) watches, alongside the per-round
+   ``n_dropped`` / ``n_rejected`` counters.
+
+Neutrality (tests/test_faults.py): with no faults injected and finite
+payloads, every sentinel op is an ELEMENTWISE identity (``m * 1.0``,
+``where(True, x, .)``) -- but the extra ``diverged``/counter outputs change
+the round's output structure, which is enough to shift XLA's fusion
+choices, so a sentinel-enabled clean run matches the unguarded trajectory
+to float32 ulps, not bitwise (empirically, even duplicating ``loss`` as a
+second output perturbs the compiled reduction order).  What IS bitwise: a
+disabled sentinel (``sentinel=None`` leaves the program untouched), a
+neutral fault spec alone (all rates 0 -- verified bit-for-bit against the
+hookless scan), and any comparison WITHIN the guarded program family --
+e.g. a NaN-corrupted client round equals the same round with that client
+drop-masked, bit for bit, because both sides compile the same program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.safl import mask_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelConfig:
+    """``norm_mult=0`` disables norm-outlier rejection (finite-checks are
+    always on -- they are the point of the layer).  ``divergence=0`` flags
+    only non-finite losses; a positive threshold also flags loss blow-ups,
+    which is how the supervisor catches runs that diverge while staying
+    finite."""
+    norm_mult: float = 10.0
+    divergence: float = 0.0
+
+    def __post_init__(self):
+        assert self.norm_mult >= 0.0
+        assert self.divergence >= 0.0
+
+
+def masked_median(x: jax.Array, pool: jax.Array) -> jax.Array:
+    """Lower median of ``x`` restricted to ``pool`` (bool mask).  Sort with
+    non-pool entries pushed to +inf, then index ``(n_pool - 1) // 2`` --
+    deterministic, no interpolation, +inf on an empty pool (which makes the
+    norm test vacuously pass; an empty pool has no weight anyway)."""
+    srt = jnp.sort(jnp.where(pool, x, jnp.inf))
+    n = jnp.sum(pool).astype(jnp.int32)
+    return srt[jnp.maximum(n - 1, 0) // 2]
+
+
+def _valid_rows(scfg: SentinelConfig, payloads: jax.Array,
+                w_arr: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row acceptance verdicts and the finite-zeroed payload.
+
+    ``w_arr`` is the post-arrival weight vector (participation x arrivals);
+    the norm-outlier median pools only arrived, finite, sampled rows, so a
+    rejected-by-NaN round and the same round with that client dropped see
+    the SAME median -- the bitwise NaN==drop property relies on this."""
+    ok = jnp.isfinite(payloads).all(axis=-1)
+    clean = jnp.where(ok[:, None], payloads, jnp.asarray(0.0, payloads.dtype))
+    valid = ok
+    if scfg.norm_mult > 0.0:
+        nrm2 = jnp.sum(jnp.square(clean), axis=-1)
+        pool = (w_arr > 0) & ok
+        med2 = masked_median(nrm2, pool)
+        valid = valid & (nrm2 <= scfg.norm_mult ** 2 * med2)
+    return valid, clean
+
+
+def _fold_valid(part_mask, valid: jax.Array):
+    v = valid.astype(jnp.float32)
+    if part_mask is None:
+        return v
+    if isinstance(part_mask, dict):
+        return {**part_mask, "w": part_mask["w"] * v}
+    return part_mask * v
+
+
+def mask_wsum(mask) -> jax.Array:
+    """Total surviving cohort weight (scalar) of an effective mask."""
+    return jnp.sum(mask_weights(mask))
+
+
+def guard_uplink(payloads: jax.Array, part_mask, fault_spec,
+                 sentinel: SentinelConfig | None):
+    """Apply the §10 fusion chain to a full ``(G, b_total)`` payload.
+
+    Returns ``(payloads, eff_mask, counters)`` where ``eff_mask`` is the
+    participation mask with fault drops and sentinel rejections folded in
+    (weight 0) and ``counters = {"n_dropped", "n_rejected"}``.  The caller
+    aggregates with the ONE existing masked mean -- no extra collective.
+    """
+    counters = {}
+    if fault_spec is not None:
+        from repro.fed.faults import (corrupt_payload, fold_arrivals,
+                                      n_dropped)
+        counters["n_dropped"] = n_dropped(fault_spec, part_mask)
+        payloads = corrupt_payload(fault_spec, payloads)
+        part_mask = fold_arrivals(fault_spec, part_mask)
+    if sentinel is not None:
+        w_arr = (jnp.ones((payloads.shape[0],), jnp.float32)
+                 if part_mask is None else mask_weights(part_mask))
+        valid, payloads = _valid_rows(sentinel, payloads, w_arr)
+        counters["n_rejected"] = jnp.sum((w_arr > 0) & ~valid)
+        part_mask = _fold_valid(part_mask, valid)
+    return payloads, part_mask, counters
+
+
+def carry_if_empty(eff_mask, new: tuple, old: tuple) -> tuple:
+    """Empty-cohort fallback: if no client survived the mask fusion, keep
+    the old (params, opt) trees -- the scalar select is a ``where``, so the
+    non-empty path is untouched (``where(False, old, new) = new`` exactly).
+    """
+    empty = mask_wsum(eff_mask) == 0
+    return jax.tree.map(lambda n, o: jnp.where(empty, o, n), new, old)
+
+
+def divergence_flag(scfg: SentinelConfig, loss: jax.Array) -> jax.Array:
+    """0/1 loss-divergence sentinel for the metric history."""
+    bad = ~jnp.isfinite(loss)
+    if scfg.divergence > 0.0:
+        bad = bad | (loss > scfg.divergence)
+    return bad.astype(jnp.float32)
+
+
+def sentinel_validity(scfg: SentinelConfig, payload_loc: jax.Array,
+                      rows: jax.Array, w_arr: jax.Array, num_clients: int,
+                      all_axes) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Shard-local sentinel verdicts with GLOBALLY consistent validity.
+
+    Inside ``shard_map`` each device holds a ``(G_loc, b_loc)`` slice of the
+    payload -- its client rows ``rows`` and one model-parallel chunk of each
+    row.  A client is finite only if EVERY chunk is finite, and its sketch
+    norm is the sum of per-chunk norms, so the verdict needs one psum of two
+    tiny ``(G,)`` stats arrays over ALL mesh axes (client axes merge
+    disjoint row sets; model axes combine chunks of the same row).  Without
+    this cross-model-shard agreement, different shards would divide by
+    different surviving-cohort weights and desynchronize the model.
+
+    Returns ``(valid (G,), clean_loc, n_rejected)``; ``valid`` and the
+    rejection count are identical on every device, the payload slice has its
+    locally non-finite rows zeroed (rows bad only on OTHER shards get weight
+    0 from ``valid``, which suffices -- their local slice is finite).
+    """
+    ok_loc = jnp.isfinite(payload_loc).all(axis=-1)
+    clean_loc = jnp.where(ok_loc[:, None],
+                          payload_loc, jnp.asarray(0.0, payload_loc.dtype))
+    bad = jnp.zeros((num_clients,), jnp.float32).at[rows].add(
+        (~ok_loc).astype(jnp.float32))
+    nrm2 = jnp.zeros((num_clients,), jnp.float32).at[rows].add(
+        jnp.sum(jnp.square(clean_loc), axis=-1))
+    if all_axes:
+        bad, nrm2 = jax.lax.psum((bad, nrm2), all_axes)
+    valid = bad == 0
+    if scfg.norm_mult > 0.0:
+        pool = (w_arr > 0) & valid
+        med2 = masked_median(nrm2, pool)
+        valid = valid & (nrm2 <= scfg.norm_mult ** 2 * med2)
+    n_rejected = jnp.sum((w_arr > 0) & ~valid)
+    return valid, clean_loc, n_rejected

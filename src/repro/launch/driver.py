@@ -38,7 +38,11 @@ reports the SAMPLED cohort: per-client bits x mask sum); ``buffer=True``
 additionally threads the traced round index ``t`` and the run's base key
 into the round as ``t=``/``base_key=`` kwargs -- what an async staleness
 buffer (``repro.fed.async_buffer``) needs to address its ring buffer and
-re-derive older rounds' sketch operators at arrival time.
+re-derive older rounds' sketch operators at arrival time; ``faults=`` takes
+a fault-injection policy (``repro.fed.faults``) whose per-round spec is
+evaluated in the scan body and passed to the round as ``fault_spec``
+(DESIGN.md §10 -- the sentinel config rides into the round via
+``functools.partial``, like ``plan=``).
 """
 
 from __future__ import annotations
@@ -69,7 +73,7 @@ def _with_bits(metrics: dict, bits_per_round: Optional[int],
     return {**metrics, "uplink_bits": bits}
 
 
-def round_hook_kwargs(t, key, kwargs_fn, participation, buffer):
+def round_hook_kwargs(t, key, kwargs_fn, participation, buffer, faults=None):
     """Per-round traced kwargs for the round fn + the round's cohort mask.
 
     This is THE contract of the repro.fed hooks, shared by both drivers (the
@@ -78,7 +82,13 @@ def round_hook_kwargs(t, key, kwargs_fn, participation, buffer):
     absolute round index (``participation.mask(t)``) and handed to the round
     as ``part_mask``; a staleness buffer additionally receives the traced
     round index ``t`` and the run's base key ``base_key`` (ring-buffer
-    addressing + per-generation operator re-derivation)."""
+    addressing + per-generation operator re-derivation); a fault policy
+    (``repro.fed.faults``) contributes the round's traced fault spec as
+    ``fault_spec`` -- drawn against the run key, so the rollback
+    supervisor's rekeyed retries redraw transient faults.  The static
+    sentinel config is NOT threaded here: like ``plan=``, it binds into the
+    round fn via ``functools.partial`` (it is not a pytree, and the host
+    loop jits the round with these kwargs as traced arguments)."""
     kw = dict(kwargs_fn(t)) if kwargs_fn is not None else {}
     mask = None
     if participation is not None:
@@ -87,6 +97,8 @@ def round_hook_kwargs(t, key, kwargs_fn, participation, buffer):
     if buffer:
         kw["t"] = t
         kw["base_key"] = key
+    if faults is not None:
+        kw["fault_spec"] = faults.spec(t, key)
     return kw, mask
 
 
@@ -96,14 +108,15 @@ _round_kwargs = round_hook_kwargs         # back-compat alias
 def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
                   kwargs_fn=None, bits_per_round: Optional[int] = None,
                   donate: bool = True, participation=None,
-                  buffer: bool = False):
+                  buffer: bool = False, faults=None):
     """Jit one scanned chunk of ``num_rounds`` rounds.
 
     Signature of the returned fn:
         (params, state, data_state, key, t0) ->
             (params, state, data_state, stacked_metrics)
     ``t0`` is a traced scalar so successive chunks reuse one executable.
-    ``participation``/``buffer`` are the repro.fed hooks (module docstring).
+    ``participation``/``buffer``/``faults`` are the repro.fed hooks (module
+    docstring).
     """
 
     def chunk(params, state, data_state, key, t0):
@@ -111,7 +124,7 @@ def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
             params, state, dstate = carry
             dstate, batch = sampler.sample(dstate, t)
             kw, mask = round_hook_kwargs(t, key, kwargs_fn, participation,
-                                         buffer)
+                                         buffer, faults)
             params, state, m = round_fn(params, state, batch,
                                         jax.random.fold_in(key, t), **kw)
             return (params, state, dstate), _with_bits(m, bits_per_round,
@@ -129,7 +142,7 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
              rounds: int, key: jax.Array, chunk_size: int = 0,
              kwargs_fn=None, bits_per_round: Optional[int] = None,
              donate: bool = True, on_chunk=None, participation=None,
-             buffer: bool = False,
+             buffer: bool = False, faults=None,
              start_round: int = 0) -> tuple[Pytree, dict, dict]:
     """Run ``rounds`` federated rounds on device in scanned chunks.
 
@@ -165,7 +178,7 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
             compiled[n] = make_chunk_fn(
                 round_fn, sampler, n, kwargs_fn=kwargs_fn,
                 bits_per_round=bits_per_round, donate=donate,
-                participation=participation, buffer=buffer)
+                participation=participation, buffer=buffer, faults=faults)
         params, state, data_state, hist = compiled[n](
             params, state, data_state, key, jnp.asarray(t, jnp.int32))
         hist = jax.tree.map(np.asarray, hist)      # ONE fetch per chunk
@@ -182,7 +195,7 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
 def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
                   rounds: int, key: jax.Array, kwargs_fn=None,
                   bits_per_round: Optional[int] = None, donate: bool = True,
-                  participation=None, buffer: bool = False,
+                  participation=None, buffer: bool = False, faults=None,
                   start_round: int = 0) -> tuple[Pytree, dict, dict]:
     """One-dispatch-per-round reference loop with the scan driver's exact
     key/batch sequence (fold_in(key, t); device-side sampling), including
@@ -201,7 +214,7 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
         tt = jnp.asarray(t, jnp.int32)
         data_state, batch = sample(data_state, tt)
         kw, mask = round_hook_kwargs(tt, key, kwargs_fn, participation,
-                                     buffer)
+                                     buffer, faults)
         params, state, m = step(params, state, batch,
                                 jax.random.fold_in(key, tt), **kw)
         hists.append(jax.tree.map(np.asarray,

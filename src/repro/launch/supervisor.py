@@ -1,0 +1,230 @@
+"""Checkpoint-rollback supervisor: host-side retry loop over the scanned
+drivers (DESIGN.md §10).
+
+The sentinels (``fed.robust``) contain per-client faults INSIDE a round;
+this layer contains whole-run divergence ACROSS rounds.  It wraps any
+chunked launcher (``launch.driver.run_scan`` or ``launch.train
+.run_mesh_scan``) and, after every chunk, inspects the chunk's metric
+history AND the end-of-chunk params: a non-finite loss, a loss above the
+configured divergence threshold, a fired ``diverged`` sentinel flag, or
+non-finite params marks the chunk BAD.  On a bad chunk the supervisor
+
+1. rolls back to a good ``(t, key)`` cursor -- the PR-4 resume path: every
+   per-round stream (data, cohorts, delays, faults, sketch operators) is a
+   pure function of the absolute round index under the run key, so
+   re-launching from a snapshot replays the uninterrupted trajectory;
+2. re-runs from there with a REKEYED run key (``fold_in(base_key,
+   _REKEY_TAG + retry)``), which redraws every transient fault stream --
+   the retry can escape a bad draw (``fed.faults`` default keying), while
+   ``persistent=True`` faults re-fire and exhaust the retry budget, which
+   is exactly the semantics a deterministic poison should have;
+3. sleeps an exponential backoff between retries and gives up with a
+   ``SupervisorError`` (carrying the full recovery log) after
+   ``max_retries`` total retries.
+
+**Detection lag.**  A round's loss is measured BEFORE its own server
+update, so a chunk whose last round diverges can validate clean while its
+end-of-chunk params are already poisoned -- and a rollback to that cursor
+would resume inside the blast radius.  Two defenses: the end-of-chunk
+params are finite-checked on the host copy the snapshot takes anyway, and
+the supervisor keeps a bounded STACK of good snapshots -- when a resume
+from some cursor faults again, that snapshot is distrusted and the stack
+pops to the previous one (deepening rollback), truncating the stitched
+history to match.  The stack bottom is the run's initial state, so the
+worst case is a clean restart, still bounded by ``max_retries``.
+
+Snapshots are HOST copies (``np.asarray``): both drivers donate their
+device carries, so a device-side reference would be invalidated by the
+very launch it is meant to guard.  The returned history is the stitched
+concatenation of the good chunks that STAND at exit, plus a
+``recovery_log`` of dicts ``{retry, t_fault, t_resume, reason}``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+# decorrelates retry keys from the per-round fold_in(key, t) chain (round
+# indices are small ints; retry counts are added to this tag)
+_REKEY_TAG = 0x5AFE
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    """``divergence=0`` treats only non-finite signals (and fired sentinel
+    flags) as faults; a positive threshold also catches finite loss
+    blow-ups.  ``backoff_s`` is the base of the exponential between-retry
+    sleep -- keep it 0 in tests, nonzero when retries contend for real
+    hardware.  ``keep_snapshots`` bounds rollback memory: the initial state
+    plus the most recent K-1 good cursors are retained."""
+    max_retries: int = 3
+    backoff_s: float = 0.0
+    divergence: float = 0.0
+    keep_snapshots: int = 8
+
+    def __post_init__(self):
+        assert self.max_retries >= 0
+        assert self.backoff_s >= 0.0
+        assert self.divergence >= 0.0
+        assert self.keep_snapshots >= 2
+
+
+class SupervisorError(RuntimeError):
+    """Raised when the retry budget is exhausted; ``.log`` holds the full
+    recovery log (every rollback attempted, with reasons)."""
+
+    def __init__(self, msg: str, log: list):
+        super().__init__(msg)
+        self.log = log
+
+
+class _ChunkFault(Exception):
+    def __init__(self, t_done: int, reason: str):
+        super().__init__(reason)
+        self.t_done = t_done
+        self.reason = reason
+
+
+def chunk_is_bad(hist: dict, divergence: float = 0.0):
+    """Host-side chunk verdict: ``(bad, reason)`` from a chunk's stacked
+    metric history (the same signals the in-graph ``diverged`` sentinel
+    flags, evaluated on the host where we can actually stop the run)."""
+    loss = np.asarray(hist.get("loss", np.zeros((0,))))
+    finite = np.isfinite(loss)
+    if not finite.all():
+        i = int(np.argmin(finite))
+        return True, f"non-finite loss at chunk offset {i}"
+    if divergence > 0.0 and (loss > divergence).any():
+        i = int(np.argmax(loss > divergence))
+        return True, (f"loss {float(loss[i]):.4g} above divergence "
+                      f"threshold {divergence:g} at chunk offset {i}")
+    flags = np.asarray(hist.get("diverged", np.zeros((0,))))
+    if flags.size and (flags > 0).any():
+        i = int(np.argmax(flags > 0))
+        return True, f"divergence sentinel fired at chunk offset {i}"
+    return False, ""
+
+
+def _host(tree: Pytree) -> Pytree:
+    return jax.tree.map(np.asarray, tree)
+
+
+def _finite_tree(tree: Pytree) -> bool:
+    return all(np.isfinite(x).all()
+               for x in jax.tree.leaves(tree)
+               if np.issubdtype(np.asarray(x).dtype, np.floating))
+
+
+def run_supervised(launch: Callable, params: Pytree, state: Pytree, *,
+                   rounds: int, key, config: SupervisorConfig | None = None,
+                   on_chunk=None, ckpt_path: str | None = None,
+                   start_round: int = 0):
+    """Supervise a chunked driver run with rollback-and-rekey retries.
+
+    ``launch(params, state, *, key, start_round, on_chunk) ->
+    (params, state, hist)`` adapts the underlying driver; e.g. for the
+    single-host scan::
+
+        launch = lambda p, s, *, key, start_round, on_chunk: run_scan(
+            round_fn, sampler, p, s, rounds=R, key=key, chunk_size=C,
+            start_round=start_round, on_chunk=on_chunk, faults=faults)
+
+    (``run_mesh_scan`` adapts identically -- both drivers share the
+    ``start_round`` cursor and per-chunk ``on_chunk`` contract this loop
+    needs).  The supervisor owns the driver's ``on_chunk`` slot for fault
+    detection and snapshotting; the caller's ``on_chunk(t_done, params,
+    state, hist)`` still runs for every chunk that validates good.
+    ``ckpt_path`` persists each good ``(t, key)`` cursor via
+    ``checkpoint.save_checkpoint`` (atomic write), the same layout
+    examples/train_lm.py resumes from.  ``start_round`` seeds the root
+    snapshot for a run resumed from a checkpoint cursor: rollbacks bottom
+    out there, never before the restored state's round.
+
+    Returns ``(params, state, history, recovery_log)``.
+    """
+    config = config or SupervisorConfig()
+    base_key = key
+    cur_key = key
+    snaps = [{"t": int(start_round), "params": _host(params),
+              "state": _host(state)}]
+    hists: list = []      # (t_start, t_end, hist) of good chunks that stand
+    log: list = []
+    retries = 0
+    last_resume = None    # cursor of the most recent rollback, if any
+
+    def sup_on_chunk(t_done, p, s, hist):
+        bad, reason = chunk_is_bad(hist, config.divergence)
+        if bad:
+            raise _ChunkFault(t_done, reason)
+        hp, hs = _host(p), _host(s)
+        if not _finite_tree(hp):
+            # detection lag: the last round's loss predates its own poisoned
+            # server update -- never snapshot a non-finite cursor
+            raise _ChunkFault(t_done, "non-finite params at chunk end")
+        snaps.append({"t": t_done, "params": hp, "state": hs})
+        if len(snaps) > config.keep_snapshots:
+            del snaps[1]          # keep the initial state as the root
+        hists.append((snaps[-2]["t"] if len(snaps) > 1 else 0, t_done, hist))
+        if ckpt_path is not None:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(
+                ckpt_path,
+                {"params": hp, "opt": hs,
+                 "cursor": {"t": np.asarray(t_done),
+                            "key": np.asarray(
+                                jax.random.key_data(cur_key))}},
+                step=t_done)
+        if on_chunk is not None:
+            on_chunk(t_done, p, s, hist)
+
+    while True:
+        top = snaps[-1]
+        try:
+            p_out, s_out, _ = launch(top["params"], top["state"],
+                                     key=cur_key, start_round=top["t"],
+                                     on_chunk=sup_on_chunk)
+            if not _finite_tree(_host(p_out)):
+                raise _ChunkFault(rounds, "non-finite final params")
+        except _ChunkFault as f:
+            retries += 1
+            if retries > config.max_retries:
+                raise SupervisorError(
+                    f"retry budget exhausted ({config.max_retries}) after "
+                    f"fault at round < {f.t_done}: {f.reason}", log)
+            if config.backoff_s > 0.0:
+                time.sleep(config.backoff_s * 2.0 ** (retries - 1))
+            if snaps[-1]["t"] == last_resume and len(snaps) > 1:
+                # resuming from this cursor already faulted once: the
+                # snapshot itself may sit inside the blast radius -- deepen
+                snaps.pop()
+            t_res = snaps[-1]["t"]
+            hists[:] = [h for h in hists if h[1] <= t_res]
+            last_resume = t_res
+            cur_key = jax.random.fold_in(base_key, _REKEY_TAG + retries)
+            log.append({"retry": retries, "t_fault": int(f.t_done),
+                        "t_resume": int(t_res), "reason": f.reason})
+            continue
+        history = (jax.tree.map(lambda *xs: np.concatenate(xs),
+                                *[h for _, _, h in hists])
+                   if hists else {})
+        return p_out, s_out, history, log
+
+
+def format_recovery_log(log: list) -> str:
+    """Human-readable recovery report (examples/train_lm.py prints this)."""
+    if not log:
+        return "supervisor: clean run, no rollbacks"
+    lines = [f"supervisor: {len(log)} rollback(s)"]
+    for e in log:
+        lines.append(
+            f"  retry {e['retry']}: fault before round {e['t_fault']} "
+            f"({e['reason']}); resumed from round {e['t_resume']} with "
+            f"rekeyed streams")
+    return "\n".join(lines)

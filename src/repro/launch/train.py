@@ -38,7 +38,11 @@ from repro.core.safl import (SAFLConfig, client_delta, mask_weights,
                              masked_mean, masked_mean_tree, masked_psum_mean)
 from repro.core.sketch import (SKETCH_CHUNK_NUMEL, SketchConfig, desk_leaf,
                                desk_leaf_stacked, sk_leaf, sk_leaf_stacked)
+from repro.fed.faults import corrupt_payload, take_rows
+from repro.fed.faults import n_dropped as fault_n_dropped
 from repro.fed.participation import check_policy_clients, is_weighted_mask
+from repro.fed.robust import (carry_if_empty, divergence_flag,
+                              sentinel_validity)
 from repro.launch.driver import round_hook_kwargs
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, forward, loss_fn, param_shapes
@@ -258,6 +262,78 @@ def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
                      check_vma=False)(deltas, key, w)
 
 
+def _sharded_sketch_guarded(mesh, plan: PackingPlan, pspecs, deltas, key,
+                            topology: str, part_mask, fault_spec, sentinel):
+    """The compressed uplink with the DESIGN.md §10 fusion chain applied
+    inside the sketch shard_map: faults -> sentinels -> participation mask
+    -> ONE payload psum.
+
+    The fault spec and the mask enter REPLICATED (tiny (G,) vectors); each
+    shard corrupts/vets its own client rows (``rows`` as in the staleness
+    buffer) and the sentinel's cross-shard agreement costs one extra psum of
+    two (G,) stats arrays over ALL mesh axes (``fed.robust
+    .sentinel_validity`` -- a client is only valid if every model shard of
+    its payload row is, or shards would divide by different cohort weights
+    and desynchronize).  The payload itself still moves through exactly one
+    psum over the client axes, with the fused effective weights.
+
+    Returns ``(update_tree, eff_w (G,), n_rejected)`` -- the effective
+    weight vector is what the caller's loss metric and empty-cohort
+    fallback key off."""
+    client_axes = client_axes_of(mesh, topology)
+    all_axes = tuple(mesh.axis_names)
+    G = num_clients_of(mesh, topology)
+    lead = client_axes if client_axes else None
+    in_specs = jax.tree.map(
+        lambda ps: P(*((lead,) + tuple(ps))), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    w0 = (jnp.ones((G,), jnp.float32) if part_mask is None
+          else mask_weights(part_mask))
+    den = float(part_mask["den"]) if is_weighted_mask(part_mask) else None
+
+    def local(*a):
+        d_tree, k, w_full = a[:3]
+        spec = a[3] if fault_spec is not None else None
+        rp = derive_round_params(plan, k)
+        flat = jax.vmap(lambda tr: pack_tree(plan, tr))(d_tree)
+        s = jax.vmap(lambda f: sk_flat(plan, rp, f))(flat)   # (G_loc, b_loc)
+        g_loc = s.shape[0]
+        cid = 0
+        for ax in client_axes:
+            cid = cid * mesh.shape[ax] + jax.lax.axis_index(ax)
+        rows = cid * g_loc + jnp.arange(g_loc)
+        w_arr = w_full
+        if spec is not None:
+            s = corrupt_payload(take_rows(spec, rows), s)
+            w_arr = w_full * spec["arrive"]
+        if sentinel is not None:
+            valid, s, n_rej = sentinel_validity(
+                sentinel, s, rows, w_arr, G, all_axes)
+            w_eff = w_arr * valid.astype(jnp.float32)
+        else:
+            n_rej = jnp.float32(0.0)
+            w_eff = w_arr
+        wl = w_eff[rows]
+        sw = jnp.sum(s * wl[:, None], axis=0, keepdims=True)
+        if client_axes:
+            sw = jax.lax.psum(sw, client_axes)   # <-- the ONE payload psum
+        if den is not None:     # static Horvitz-Thompson denominator
+            mean = sw / jnp.asarray(den, sw.dtype)
+        else:                   # w_eff is replicated: no weight psum needed
+            mean = sw / jnp.maximum(jnp.sum(w_eff), 1.0).astype(sw.dtype)
+        u = desk_flat(plan, rp, mean[0])
+        return unpack_tree(plan, u, cast=False), w_eff, n_rej
+
+    args = [deltas, key, w0]
+    specs = [in_specs, P(), P()]
+    if fault_spec is not None:
+        args.append(fault_spec)
+        specs.append({k: P() for k in fault_spec})
+    return shard_map(local, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=(pspecs, P(), P()),
+                     check_vma=False)(*args)
+
+
 # ---------------------------------------------------------------------------
 # step builders
 # ---------------------------------------------------------------------------
@@ -427,7 +503,8 @@ def init_mesh_async_state(model_cfg: ModelConfig, safl_cfg: SAFLConfig,
 
 def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
                             buf, bufw, round_key, base_key, t,
-                            topology: str = "cross_device", part_mask=None):
+                            topology: str = "cross_device", part_mask=None,
+                            fault_spec=None, sentinel=None):
     """FedBuff-style staleness-buffered uplink on the mesh (DESIGN §9).
 
     One shard_map over the whole mesh: sketch the local client rows with
@@ -444,7 +521,14 @@ def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
 
     With ``delay="zero"`` the d > 0 arrival groups are statically empty and
     the round lowers to the synchronous masked path -- the bitwise parity
-    pin of tests/test_mesh_scan.py."""
+    pin of tests/test_mesh_scan.py.
+
+    ``fault_spec``/``sentinel`` (DESIGN.md §10) corrupt and then vet the
+    payload BEFORE the push -- the ring must never store a poisoned row, or
+    it would re-emit it at every later pop of that generation; dropped and
+    rejected clients store weight 0, exactly like non-participation.  The
+    guarded call additionally returns ``(W, n_rejected)``:
+    ``(update_tree, buf, bufw, W, n_rejected)``."""
     from repro.fed.async_buffer import arrival_weight
     if is_weighted_mask(part_mask):
         raise TypeError(
@@ -462,7 +546,12 @@ def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
         lambda ps: P(*((lead,) + tuple(ps))), pspecs,
         is_leaf=lambda x: isinstance(x, P))
 
-    def local(d_tree, buf, bufw, rk, base, t, w_loc):
+    guarded = fault_spec is not None or sentinel is not None
+    all_axes = tuple(mesh.axis_names)
+
+    def local(*a):
+        d_tree, buf, bufw, rk, base, t, wv = a[:7]
+        spec = a[7] if fault_spec is not None else None
         rp_t = derive_round_params(plan, rk)
         flat = jax.vmap(lambda tr: pack_tree(plan, tr))(d_tree)
         sks = jax.vmap(lambda f: sk_flat(plan, rp_t, f))(flat) \
@@ -471,9 +560,26 @@ def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
         # global client ids of this shard's rows (row-major over the client
         # axes, matching how shard_map splits the leading G dim)
         cid = 0
-        for a in client_axes:
-            cid = cid * mesh.shape[a] + jax.lax.axis_index(a)
+        for a_ in client_axes:
+            cid = cid * mesh.shape[a_] + jax.lax.axis_index(a_)
         rows = cid * g_loc + jnp.arange(g_loc)
+        if not guarded:
+            w_loc, n_rej = wv, None      # wv entered sharded over clients
+        else:
+            # wv entered REPLICATED: faults/sentinels fuse into the full
+            # (G,) weight vector BEFORE the push (§10 order), so the ring
+            # only ever stores vetted payloads and their fused weights
+            w_full = wv
+            if spec is not None:
+                sks = corrupt_payload(take_rows(spec, rows), sks)
+                w_full = w_full * spec["arrive"]
+            if sentinel is not None:
+                valid, sks, n_rej = sentinel_validity(
+                    sentinel, sks, rows, w_full, G, all_axes)
+                w_full = w_full * valid.astype(jnp.float32)
+            else:
+                n_rej = jnp.float32(0.0)
+            w_loc = w_full[rows]
         # -- push: generation t claims slot t % D (its previous tenant,
         # generation t - D, fully drained by round t - 1) --
         slot_t = jnp.mod(t, D)
@@ -507,39 +613,67 @@ def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
         upd_flat = sum(desk_flat(plan, rp_g, S_stack[i] / W_safe)
                        for i, (_, _, rp_g) in enumerate(weighted))
         update = unpack_tree(plan, upd_flat, cast=False)
+        if guarded:
+            return update, buf, bufw, W, n_rej
         return update, buf, bufw
 
     w = part_mask if part_mask is not None \
         else jnp.ones((G,), jnp.float32)
-    return shard_map(local, mesh=mesh,
-                     in_specs=(in_specs, buf_spec, bufw_spec, P(), P(), P(),
-                               P(lead)),
-                     out_specs=(pspecs, buf_spec, bufw_spec),
-                     check_vma=False)(deltas, buf, bufw, round_key, base_key,
-                                      t, w)
+    args = [deltas, buf, bufw, round_key, base_key, t, w]
+    specs = [in_specs, buf_spec, bufw_spec, P(), P(), P(),
+             P() if guarded else P(lead)]
+    out_specs = (pspecs, buf_spec, bufw_spec)
+    if guarded:
+        out_specs = out_specs + (P(), P())
+    if fault_spec is not None:
+        args.append(fault_spec)
+        specs.append({k: P() for k in fault_spec})
+    return shard_map(local, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=out_specs, check_vma=False)(*args)
 
 
 def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                      topology: str = "cross_device", *, participation=None,
-                     buffer=None):
+                     buffer=None, faults=None, sentinel=None):
     """The typed-key SAFL mesh round:
     ``core(params, state, batch, round_key, **hook_kwargs) ->
-    (params, state, loss)``.
+    (params, state, loss_or_metrics)``.
 
     The static sketch layout comes from ``_mesh_plan`` (built once, outside
     any trace); ``make_safl_train_step`` wraps this with the key_data
     calling convention and ``make_safl_scan_fn`` scans it.  The repro.fed
     hooks ride the same core for both drivers: ``participation`` masks the
     server aggregation over the round's sampled cohort (mask evaluated by
-    the CALLER in the scan body, handed in as ``part_mask``), and
-    ``buffer`` (an ``fed.async_buffer.AsyncConfig``) swaps the synchronous
-    uplink for the mesh staleness ring buffer, with ``state`` the dict from
+    the CALLER in the scan body, handed in as ``part_mask``), ``buffer``
+    (an ``fed.async_buffer.AsyncConfig``) swaps the synchronous uplink for
+    the mesh staleness ring buffer, with ``state`` the dict from
     ``init_mesh_async_state`` and ``t``/``base_key`` threaded in by the
-    caller (``launch.driver.round_hook_kwargs``)."""
+    caller (``launch.driver.round_hook_kwargs``), and ``faults``/
+    ``sentinel`` (``fed.faults`` / ``fed.robust``, DESIGN.md §10) inject
+    and contain payload faults inside the sketch shard_map (the caller
+    threads the traced per-round ``fault_spec``).  Hookless and
+    participation/buffer-only cores return a loss SCALAR (the PR-4/PR-5
+    contract, bitwise-pinned); fault/sentinel cores return a metrics dict
+    (``loss`` + ``n_dropped``/``n_rejected``/``diverged`` counters)."""
     abstract, pspecs, plan = _mesh_plan(model_cfg, safl_cfg, mesh, topology)
     G = num_clients_of(mesh, topology)
+    guarded = faults is not None or sentinel is not None
     if participation is not None:
         check_policy_clients(participation, G, "mesh driver")
+    if guarded:
+        if safl_cfg.sketch.kind == "none":
+            raise ValueError(
+                "fault injection / payload sentinels act on the packed "
+                "sketch uplink; fedopt (sketch.kind='none') has no sketch "
+                "payload")
+        if plan is None:
+            raise ValueError(
+                "the mesh fault/sentinel hooks need the packed plan route "
+                "(every local shard <= SKETCH_CHUNK_NUMEL)")
+        if faults is not None and faults.num_clients != G:
+            raise ValueError(
+                f"fault policy covers {faults.num_clients} clients, the "
+                f"mesh topology has {G}")
     if buffer is not None:
         if safl_cfg.sketch.kind == "none":
             raise ValueError("the staleness buffer aggregates in sketch "
@@ -551,19 +685,57 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                 "(every local shard <= SKETCH_CHUNK_NUMEL)")
 
     def core(params, state, batch, key, *, t=None, base_key=None,
-             part_mask=None):
+             part_mask=None, fault_spec=None):
         eta = jnp.asarray(safl_cfg.client_lr, jnp.float32)
         deltas, losses = client_deltas_sharded(
             model_cfg, safl_cfg, mesh, topology, params, batch, eta)
         if buffer is not None:
-            update, buf, bufw = sharded_sketch_buffered(
+            if not guarded:
+                update, buf, bufw = sharded_sketch_buffered(
+                    mesh, buffer, plan, pspecs, deltas, state["buf"],
+                    state["bufw"], key, base_key, t, topology,
+                    part_mask=part_mask)
+                params, opt = apply_update(
+                    safl_cfg.server, state["opt"], params, update)
+                return (params, {"opt": opt, "buf": buf, "bufw": bufw},
+                        masked_mean(losses, part_mask))
+            update, buf, bufw, W, n_rej = sharded_sketch_buffered(
                 mesh, buffer, plan, pspecs, deltas, state["buf"],
                 state["bufw"], key, base_key, t, topology,
-                part_mask=part_mask)
-            params, opt = apply_update(
+                part_mask=part_mask, fault_spec=fault_spec,
+                sentinel=sentinel)
+            new_params, opt = apply_update(
                 safl_cfg.server, state["opt"], params, update)
-            return (params, {"opt": opt, "buf": buf, "bufw": bufw},
-                    masked_mean(losses, part_mask))
+            loss = masked_mean(losses, part_mask)
+            metrics = {"loss": loss, "arrival_weight": W,
+                       "n_rejected": n_rej}
+            if fault_spec is not None:
+                metrics["n_dropped"] = fault_n_dropped(fault_spec, part_mask)
+            if sentinel is not None:
+                # no-arrival round: carry the server through unchanged
+                new_params, opt = jax.tree.map(
+                    lambda nw, o: jnp.where(W > 0, nw, o),
+                    (new_params, opt), (params, state["opt"]))
+                metrics["diverged"] = divergence_flag(sentinel, loss)
+            return (new_params, {"opt": opt, "buf": buf, "bufw": bufw},
+                    metrics)
+        if guarded:
+            update, eff_w, n_rej = _sharded_sketch_guarded(
+                mesh, plan, pspecs, deltas, key, topology, part_mask,
+                fault_spec, sentinel)
+            eff_mask = ({**part_mask, "w": eff_w}
+                        if is_weighted_mask(part_mask) else eff_w)
+            new_params, new_state = apply_update(
+                safl_cfg.server, state, params, update)
+            loss = masked_mean(losses, eff_mask)
+            metrics = {"loss": loss, "n_rejected": n_rej}
+            if fault_spec is not None:
+                metrics["n_dropped"] = fault_n_dropped(fault_spec, part_mask)
+            if sentinel is not None:
+                new_params, new_state = carry_if_empty(
+                    eff_mask, (new_params, new_state), (params, state))
+                metrics["diverged"] = divergence_flag(sentinel, loss)
+            return new_params, new_state, metrics
         if safl_cfg.sketch.kind == "none":
             # FedOpt baseline: raw-delta mean = O(d) all-reduce over clients
             if part_mask is None:
@@ -584,22 +756,28 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
 
 def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                          topology: str = "cross_device", *,
-                         participation=None, buffer=None):
+                         participation=None, buffer=None, faults=None,
+                         sentinel=None):
     """SAFL round on the mesh.  batch leaves: (G, K, mb, ...) with G = number
     of FL clients (data-parallel groups or pods, per ``topology``).
 
     Without hooks the step keeps the PR-4 signature
     ``step(params, opt_state, batch, key_data)`` where ``key_data`` is the
-    ROUND key's data.  With ``participation=``/``buffer=`` (repro.fed) the
-    step needs the absolute round index and the run's base key --
+    ROUND key's data.  With any repro.fed hook
+    (``participation=``/``buffer=``/``faults=``/``sentinel=``) the step
+    needs the absolute round index and the run's base key --
     ``step(params, state, batch, base_key_data, t)`` -- and derives the
     round key as ``fold_in(base, t)`` itself, the exact chain the scanned
     driver uses; ``state`` is the ``init_mesh_async_state`` dict when
-    buffered."""
+    buffered.  Fault/sentinel steps return a metrics DICT in place of the
+    loss scalar (see ``_make_round_core``)."""
     core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology,
                                     participation=participation,
-                                    buffer=buffer)
-    if participation is None and buffer is None:
+                                    buffer=buffer, faults=faults,
+                                    sentinel=sentinel)
+    hooked = (participation is not None or buffer is not None
+              or faults is not None or sentinel is not None)
+    if not hooked:
         def step(params, opt_state, batch, key_data):
             return core(params, opt_state, batch,
                         jax.random.wrap_key_data(key_data))
@@ -607,7 +785,7 @@ def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
         def step(params, state, batch, key_data, t):
             base = jax.random.wrap_key_data(key_data)
             kw, _ = round_hook_kwargs(t, base, None, participation,
-                                      buffer is not None)
+                                      buffer is not None, faults)
             return core(params, state, batch, jax.random.fold_in(base, t),
                         **kw)
 
@@ -624,11 +802,13 @@ def _fedopt_cfg(safl_cfg: SAFLConfig) -> SAFLConfig:
 
 def make_fedopt_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                            topology: str = "cross_device", *,
-                           participation=None, buffer=None):
+                           participation=None, buffer=None, faults=None,
+                           sentinel=None):
     """Uncompressed FedOPT baseline: raw-delta mean = O(d) all-reduce."""
     return make_safl_train_step(model_cfg, _fedopt_cfg(safl_cfg), mesh,
                                 topology, participation=participation,
-                                buffer=buffer)
+                                buffer=buffer, faults=faults,
+                                sentinel=sentinel)
 
 
 # ---------------------------------------------------------------------------
@@ -652,7 +832,8 @@ def mesh_sampler(mesh, sampler, topology: str = "cross_device"):
 def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                       topology: str = "cross_device", *, sampler,
                       num_rounds: int, donate: bool = True,
-                      participation=None, buffer=None):
+                      participation=None, buffer=None, faults=None,
+                      sentinel=None):
     """Jit ``num_rounds`` SAFL mesh rounds as ONE ``lax.scan`` dispatch.
 
     The scan sits OUTSIDE the shard_map round: each scanned step draws its
@@ -672,6 +853,10 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     carries the staleness ring (``init_mesh_async_state``) in place of the
     bare opt state, donated like every other carry leaf.  An all-ones mask
     and a delay=0 buffer are pinned bitwise to the hookless scan.
+    ``faults``/``sentinel`` (DESIGN.md §10) inject and contain payload
+    faults; their chunk history grows the per-round ``n_dropped``/
+    ``n_rejected``/``diverged`` counters next to the loss (disabled hooks
+    leave the scan program -- and the pinned trajectories -- untouched).
 
     Signature of the returned fn:
         ``(params, opt_state, data_state, key_data, t0) ->
@@ -682,7 +867,8 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     """
     core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology,
                                     participation=participation,
-                                    buffer=buffer)
+                                    buffer=buffer, faults=faults,
+                                    sentinel=sentinel)
 
     def chunk(params, opt_state, data_state, key_data, t0):
         def body(carry, t):
@@ -690,11 +876,13 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
             dstate, batch = sampler.sample(dstate, t)
             base = jax.random.wrap_key_data(kd)
             kw, _ = round_hook_kwargs(t, base, None, participation,
-                                      buffer is not None)
+                                      buffer is not None, faults)
             rk = jax.random.fold_in(base, t)
-            params, opt_state, loss = core(params, opt_state, batch, rk,
-                                           **kw)
-            return (params, opt_state, dstate, kd), {"loss": loss}
+            params, opt_state, m = core(params, opt_state, batch, rk, **kw)
+            # fault/sentinel cores return the full metrics dict; everything
+            # else keeps the bare-loss history (static distinction)
+            return ((params, opt_state, dstate, kd),
+                    m if isinstance(m, dict) else {"loss": m})
 
         (params, opt_state, data_state, key_data), hist = jax.lax.scan(
             body, (params, opt_state, data_state, key_data),
@@ -708,20 +896,23 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
 def make_fedopt_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                         topology: str = "cross_device", *, sampler,
                         num_rounds: int, donate: bool = True,
-                        participation=None, buffer=None):
+                        participation=None, buffer=None, faults=None,
+                        sentinel=None):
     """Scanned uncompressed FedOPT mesh rounds (``sketch.kind == "none"``:
     the raw-delta O(d) all-reduce inside the same scan layout)."""
     return make_safl_scan_fn(model_cfg, _fedopt_cfg(safl_cfg), mesh,
                              topology, sampler=sampler,
                              num_rounds=num_rounds, donate=donate,
-                             participation=participation, buffer=buffer)
+                             participation=participation, buffer=buffer,
+                             faults=faults, sentinel=sentinel)
 
 
 def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
                   params, opt_state, *, rounds: int, key,
                   topology: str = "cross_device", chunk_size: int = 0,
                   start_round: int = 0, donate: bool = True, on_chunk=None,
-                  participation=None, buffer=None):
+                  participation=None, buffer=None, faults=None,
+                  sentinel=None):
     """Run ``rounds`` mesh rounds in scanned chunks (the multi-pod analogue
     of ``launch.driver.run_scan``).
 
@@ -738,7 +929,11 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
     ``fed.async_buffer.AsyncConfig``, in which case ``opt_state`` must be
     the ``init_mesh_async_state`` dict (the staleness ring rides the
     donated scan carry).  An all-ones mask / delay=0 buffer reproduce the
-    hookless trajectories bitwise (tests/test_mesh_scan.py).
+    hookless trajectories bitwise (tests/test_mesh_scan.py).  ``faults``/
+    ``sentinel`` are the fault-injection / payload-sentinel hooks
+    (DESIGN.md §10); their history carries ``n_dropped``/``n_rejected``/
+    ``diverged`` counters next to the loss, which is what the rollback
+    supervisor (``launch.supervisor``) watches.
 
     Returns ``(params, opt_state, history)`` with host-side
     ``(rounds - start_round,)`` arrays."""
@@ -757,7 +952,7 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
             compiled[n], _ = make_safl_scan_fn(
                 model_cfg, safl_cfg, mesh, topology, sampler=sampler,
                 num_rounds=n, donate=donate, participation=participation,
-                buffer=buffer)
+                buffer=buffer, faults=faults, sentinel=sentinel)
         params, opt_state, data_state, _, hist = compiled[n](
             params, opt_state, data_state, jnp.asarray(kd_host),
             jnp.asarray(t, jnp.int32))
@@ -774,7 +969,8 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
 
 def run_mesh_host_loop(step, sampler, params, opt_state, *, rounds: int, key,
                        start_round: int = 0, donate: bool = True,
-                       participation=None, buffer=None):
+                       participation=None, buffer=None, faults=None,
+                       sentinel=None):
     """One-jitted-dispatch-per-round mesh reference with the scanned
     driver's EXACT key/batch sequence: round t consumes
     ``key_data(fold_in(key, t))`` and ``sampler.sample(state, t)``.
@@ -784,27 +980,32 @@ def run_mesh_host_loop(step, sampler, params, opt_state, *, rounds: int, key,
     agree bitwise.
 
     With the repro.fed hooks, build ``step`` with the SAME
-    ``participation=``/``buffer=`` and pass them here too: the hooked step
-    takes ``(params, state, batch, base_key_data, t)`` and re-derives the
-    round key / cohort mask itself, so this loop feeds it the base key and
-    the absolute round index instead of the folded round key."""
+    ``participation=``/``buffer=``/``faults=``/``sentinel=`` and pass them
+    here too: the hooked step takes ``(params, state, batch, base_key_data,
+    t)`` and re-derives the round key / cohort mask / fault spec itself, so
+    this loop feeds it the base key and the absolute round index instead of
+    the folded round key.  Fault/sentinel steps emit a metrics dict per
+    round; the history stacks every key."""
     data_state = sampler.init_state()
     sample = jax.jit(sampler.sample)
     jstep = jax.jit(step, donate_argnums=(0, 1) if donate else ())
-    hooked = participation is not None or buffer is not None
+    hooked = (participation is not None or buffer is not None
+              or faults is not None or sentinel is not None)
     kd_base = np.asarray(jax.random.key_data(key))
-    losses = []
+    hists = []
     for t in range(int(start_round), rounds):
         data_state, batch = sample(data_state, jnp.asarray(t, jnp.int32))
         if hooked:
-            params, opt_state, loss = jstep(
+            params, opt_state, m = jstep(
                 params, opt_state, batch, jnp.asarray(kd_base),
                 jnp.asarray(t, jnp.int32))
         else:
             kd = jax.random.key_data(jax.random.fold_in(key, t))
-            params, opt_state, loss = jstep(params, opt_state, batch, kd)
-        losses.append(np.asarray(loss))            # blocks every round
-    return params, opt_state, {"loss": np.stack(losses)}
+            params, opt_state, m = jstep(params, opt_state, batch, kd)
+        if not isinstance(m, dict):
+            m = {"loss": m}
+        hists.append(jax.tree.map(np.asarray, m))  # blocks every round
+    return params, opt_state, jax.tree.map(lambda *xs: np.stack(xs), *hists)
 
 
 def make_prefill_step(model_cfg: ModelConfig):

@@ -1,0 +1,454 @@
+"""Fault injection, payload sentinels, rollback supervisor (DESIGN.md §10).
+
+Pins the ISSUE 7 contracts on the single-host scan driver (the mesh-path
+twins live in tests/test_mesh_scan.py, which owns the 8-device harness):
+
+  * a neutral fault policy (all rates 0) is BITWISE the hookless scan, on
+    the sync, clipped, participation-masked and async-buffered paths;
+  * a sentinel-guarded clean run matches the unguarded trajectory to
+    float32 ulps with zero rejections (bitwise is impossible: the extra
+    counter outputs alone shift XLA's fusion choices -- fed/robust.py);
+  * a NaN-corrupted client round is BITWISE the same round with that
+    client dropout-masked (both sides compile the same guarded program);
+  * any scripted fault pattern leaves post-aggregation params finite under
+    the sentinels, including all-drop rounds (empty-cohort carry-through)
+    and majority-honest Byzantine scaling (norm-outlier rejection);
+  * the supervisor escapes transient faults by rekeyed rollback from the
+    last good (t, key) cursor, exhausts its retry budget on persistent
+    faults, and stitches a finite full-length history.
+
+Hypothesis property tests ride along under ``importorskip`` (the tier-1
+container has no hypothesis; tools/check_skipped_files.py still sees this
+module alive through the deterministic tests).
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.safl import fedopt_round, init_safl
+from repro.fed import (BYZANTINE, DROP, INF, NAN, OK, AsyncConfig,
+                       FaultConfig, FaultTable, SentinelConfig,
+                       UniformParticipation, init_async_state,
+                       make_async_round)
+from repro.fed.faults import _spec_from_codes
+from repro.launch.driver import run_host_loop, run_scan
+from repro.launch.supervisor import (SupervisorConfig, SupervisorError,
+                                     chunk_is_bad, format_recovery_log,
+                                     run_supervised)
+from test_fed import (G, _LinearSampler, _linear_loss, _params0, _safl_setup,
+                      _SK)
+
+SENT = SentinelConfig(norm_mult=10.0)
+
+
+def _finite(tree) -> bool:
+    return all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(tree))
+
+
+def _run(round_fn, fresh, *, rounds=8, chunk_size=4, **kw):
+    p0, s0 = fresh()
+    return run_scan(round_fn, _LinearSampler(), p0, s0, rounds=rounds,
+                    key=jax.random.key(0), chunk_size=chunk_size, **kw)
+
+
+def _eq(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _row(code, client=1):
+    return tuple(code if c == client else OK for c in range(G))
+
+
+# ---------------------------------------------------------------------------
+# neutrality: disabled faults leave every trajectory bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("clip", [False, True], ids=["safl", "clipped"])
+def test_neutral_faults_bitwise(clip):
+    """All-zero fault rates == no faults hook at all, bit for bit: the
+    neutral spec multiplies payloads by 1.0 and the mask by an all-ones
+    arrival vector, and adds only the n_dropped counter output."""
+    _, _, round_fn, fresh = _safl_setup(clip=clip)
+    pA, sA, hA = _run(round_fn, fresh)
+    pB, sB, hB = _run(round_fn, fresh, faults=FaultConfig(num_clients=G))
+    _eq((pA, sA), (pB, sB))
+    np.testing.assert_array_equal(hA["loss"], hB["loss"])
+    assert hB["n_dropped"].sum() == 0
+
+
+def test_neutral_faults_bitwise_with_participation():
+    """Fault arrivals fold multiplicatively into the cohort mask, so a
+    neutral policy leaves a participation-masked run untouched too."""
+    _, _, round_fn, fresh = _safl_setup()
+    part = UniformParticipation(num_clients=G, frac=0.5, seed=3)
+    pA, _, hA = _run(round_fn, fresh, participation=part)
+    pB, _, hB = _run(round_fn, fresh, participation=part,
+                     faults=FaultConfig(num_clients=G))
+    _eq(pA, pB)
+    np.testing.assert_array_equal(hA["loss"], hB["loss"])
+
+
+def test_neutral_faults_bitwise_async():
+    cfg, plan, _, _ = _safl_setup()
+    acfg = AsyncConfig(max_delay=2, delay="stagger")
+    arf = make_async_round(cfg, _linear_loss, acfg, plan)
+    fresh = lambda: (_params0(), init_async_state(cfg, acfg, _params0(),
+                                                  plan, G))
+    pA, sA, hA = _run(arf, fresh, buffer=True)
+    pB, sB, hB = _run(arf, fresh, buffer=True,
+                      faults=FaultConfig(num_clients=G))
+    _eq((pA, sA), (pB, sB))
+    np.testing.assert_array_equal(hA["loss"], hB["loss"])
+
+
+def test_sentinel_clean_run_matches_unguarded():
+    """Sentinels on a clean run: zero rejections, no divergence flags, and
+    a trajectory equal to the unguarded one to float32 ulps (NOT bitwise --
+    the extra metric outputs alone change XLA fusion, see fed/robust.py)."""
+    _, _, round_fn, fresh = _safl_setup()
+    pA, _, hA = _run(round_fn, fresh)
+    rf = functools.partial(round_fn, sentinel=SENT)
+    pB, _, hB = _run(rf, fresh, faults=FaultConfig(num_clients=G))
+    assert hB["n_rejected"].sum() == 0
+    assert hB["diverged"].sum() == 0
+    np.testing.assert_allclose(np.asarray(pA["W"]), np.asarray(pB["W"]),
+                               rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(hA["loss"], hB["loss"], rtol=2e-5)
+
+
+def test_fault_stream_is_chunk_invariant():
+    """Fault draws are pure in the absolute round index, so chunk splits
+    and the host-loop reference see the identical fault pattern."""
+    _, _, round_fn, fresh = _safl_setup()
+    faults = FaultConfig(num_clients=G, drop_rate=0.3, seed=5)
+    pA, _, hA = _run(round_fn, fresh, chunk_size=8, faults=faults)
+    pB, _, hB = _run(round_fn, fresh, chunk_size=3, faults=faults)
+    _eq(pA, pB)
+    np.testing.assert_array_equal(hA["n_dropped"], hB["n_dropped"])
+    p0, s0 = fresh()
+    pC, _, hC = run_host_loop(round_fn, _LinearSampler(), p0, s0, rounds=8,
+                              key=jax.random.key(0), faults=faults)
+    _eq(pA, pC)
+    np.testing.assert_array_equal(hA["n_dropped"], hC["n_dropped"])
+
+
+# ---------------------------------------------------------------------------
+# guarded fault semantics
+# ---------------------------------------------------------------------------
+
+def test_nan_equals_drop_bitwise():
+    """A NaN-corrupted client round == the same round with that client
+    dropout-masked, bit for bit, on params/opt/loss.  (The counters differ
+    by design: one increments n_rejected, the other n_dropped.)"""
+    _, _, round_fn, fresh = _safl_setup()
+    rf = functools.partial(round_fn, sentinel=SENT)
+    pA, sA, hA = _run(rf, fresh, faults=FaultTable(codes=(_row(NAN),) * 3))
+    pB, sB, hB = _run(rf, fresh, faults=FaultTable(codes=(_row(DROP),) * 3))
+    _eq((pA, sA), (pB, sB))
+    np.testing.assert_array_equal(hA["loss"], hB["loss"])
+    assert hA["n_rejected"].sum() == 3 and hA["n_dropped"].sum() == 0
+    assert hB["n_dropped"].sum() == 3 and hB["n_rejected"].sum() == 0
+
+
+def test_inf_equals_drop_bitwise_async():
+    """Same property through the async buffer, with Inf corruption: the
+    ring never stores a poisoned row (guarded BEFORE push), so the whole
+    downstream trajectory matches the dropout-masked one."""
+    cfg, plan, _, _ = _safl_setup()
+    acfg = AsyncConfig(max_delay=2, delay="stagger")
+    arf = functools.partial(make_async_round(cfg, _linear_loss, acfg, plan),
+                            sentinel=SENT)
+    fresh = lambda: (_params0(), init_async_state(cfg, acfg, _params0(),
+                                                  plan, G))
+    pA, sA, hA = _run(arf, fresh, buffer=True,
+                      faults=FaultTable(codes=(_row(INF),) * 3))
+    pB, sB, hB = _run(arf, fresh, buffer=True,
+                      faults=FaultTable(codes=(_row(DROP),) * 3))
+    # ring contents may differ where weights are 0 (zeroed vs honest row);
+    # everything that feeds the trajectory must match exactly
+    _eq((pA, sA["opt"]), (pB, sB["opt"]))
+    np.testing.assert_array_equal(hA["loss"], hB["loss"])
+    assert np.isfinite(np.asarray(sA["buf"])).all()
+    assert _finite(pA)
+
+
+def test_unguarded_nan_poisons_guarded_stays_finite():
+    _, _, round_fn, fresh = _safl_setup()
+    faults = FaultTable(codes=(_row(NAN),) * 3)
+    pA, _, _ = _run(round_fn, fresh, faults=faults)
+    assert not _finite(pA)
+    rf = functools.partial(round_fn, sentinel=SENT)
+    pB, _, hB = _run(rf, fresh, faults=faults)
+    assert _finite(pB)
+    assert np.isfinite(hB["loss"]).all()
+
+
+def test_byzantine_rejected_by_norm_sentinel():
+    """A 1e4-scaled payload is finite (passes the finite-check) but its
+    sketch norm is ~1e8x the cohort median -- the norm rule rejects it and
+    the run matches the drop-masked twin bitwise."""
+    _, _, round_fn, fresh = _safl_setup()
+    rf = functools.partial(round_fn, sentinel=SENT)
+    byz = FaultTable(codes=(_row(BYZANTINE),) * 3, byzantine_scale=1e4)
+    pA, sA, hA = _run(rf, fresh, faults=byz)
+    pB, sB, hB = _run(rf, fresh, faults=FaultTable(codes=(_row(DROP),) * 3))
+    _eq((pA, sA), (pB, sB))
+    assert hA["n_rejected"].sum() == 3
+
+
+def test_all_drop_round_carries_server_through():
+    """An all-drop round under sentinels is a true no-op: params AND opt
+    state carry through unchanged (an adaptive server applying a zero
+    pseudo-gradient would still decay its moments)."""
+    _, _, round_fn, fresh = _safl_setup()
+    rf = functools.partial(round_fn, sentinel=SENT)
+    all_drop = FaultTable(codes=((DROP,) * G,))
+    sampler = _LinearSampler()
+    p0, s0 = fresh()
+    p1, s1, h1 = run_scan(rf, sampler, p0, s0, rounds=1,
+                          key=jax.random.key(0),
+                          faults=all_drop)
+    p0, s0 = fresh()
+    _eq((p1, s1), (p0, s0))
+    assert h1["n_dropped"].sum() == G
+    # ...and the run continues normally afterwards (rounds past the table
+    # are fault-free)
+    p2, s2, h2 = _run(rf, fresh, faults=all_drop)
+    assert _finite(p2) and np.isfinite(h2["loss"]).all()
+
+
+def test_fedopt_rejects_fault_kwargs():
+    """The FedOPT baseline has no sketch payload for sketch-space faults
+    or sentinels to act on -- both kwargs must fail loudly, not silently
+    no-op."""
+    cfg, _, _, _ = _safl_setup()
+    sampler = _LinearSampler()
+    st = sampler.init_state()
+    _, batch = sampler.sample(st, jnp.asarray(0))
+    p0 = _params0()
+    s0 = init_safl(cfg, p0)
+    with pytest.raises(ValueError, match="sketch"):
+        fedopt_round(cfg, _linear_loss, p0, s0, batch, jax.random.key(1),
+                     fault_spec=_spec_from_codes(jnp.zeros(G, jnp.int32),
+                                                 1e3))
+    with pytest.raises(ValueError, match="sketch"):
+        fedopt_round(cfg, _linear_loss, p0, s0, batch, jax.random.key(1),
+                     sentinel=SENT)
+
+
+def test_fault_config_validation():
+    with pytest.raises(AssertionError):
+        FaultConfig(num_clients=G, drop_rate=0.6, nan_rate=0.6)
+    with pytest.raises(AssertionError):
+        FaultTable(codes=((OK, DROP), (OK,)))
+    with pytest.raises(AssertionError):
+        FaultTable(codes=((7, OK),))
+
+
+# ---------------------------------------------------------------------------
+# supervisor: rollback, rekey, bounded retries
+# ---------------------------------------------------------------------------
+
+class _TransientFaults:
+    """Scripted faults that fire ONLY under a specific run key: the
+    deterministic stand-in for a transient fault -- any rekeyed retry is
+    clean by construction, so the tests exercise the rollback mechanism
+    itself rather than a probability of escape."""
+
+    def __init__(self, key0, codes_row, rounds=(4, 6), scale=1e3):
+        self.kd0 = np.asarray(jax.random.key_data(key0))
+        self.codes_row = jnp.asarray(codes_row, jnp.int32)
+        self.lo, self.hi = rounds
+        self.scale = scale
+
+    def spec(self, t, base_key):
+        same = jnp.all(jax.random.key_data(base_key) == self.kd0)
+        hit = same & (t >= self.lo) & (t < self.hi)
+        codes = jnp.where(hit, self.codes_row, OK)
+        return _spec_from_codes(codes, self.scale)
+
+
+def _launcher(round_fn, faults, rounds=8, chunk_size=2):
+    sampler = _LinearSampler()
+
+    def launch(p, s, *, key, start_round, on_chunk):
+        return run_scan(round_fn, sampler, p, s, rounds=rounds, key=key,
+                        chunk_size=chunk_size, start_round=start_round,
+                        on_chunk=on_chunk, faults=faults)
+    return launch
+
+
+def test_supervisor_escapes_transient_fault(tmp_path):
+    """Unguarded transient NaN payloads poison the run; the supervisor
+    detects the non-finite chunk, rolls back to the last good cursor,
+    rekeys, and completes with finite params and a full stitched history."""
+    _, _, round_fn, fresh = _safl_setup()
+    key = jax.random.key(0)
+    faults = _TransientFaults(key, _row(NAN))
+    p0, s0 = fresh()
+    pX, _, _ = run_scan(round_fn, _LinearSampler(), p0, s0, rounds=8,
+                        key=key, chunk_size=2, faults=faults)
+    assert not _finite(pX)
+
+    ckpt = str(tmp_path / "sup")
+    p0, s0 = fresh()
+    p, s, hist, log = run_supervised(
+        _launcher(round_fn, faults), p0, s0, rounds=8, key=key,
+        config=SupervisorConfig(max_retries=3), ckpt_path=ckpt)
+    assert _finite(p)
+    assert len(hist["loss"]) == 8 and np.isfinite(hist["loss"]).all()
+    assert len(log) == 1
+    assert log[0]["retry"] == 1 and log[0]["t_resume"] == 4
+    assert "non-finite" in log[0]["reason"]
+    assert os.path.exists(ckpt + ".npz") and os.path.exists(ckpt + ".json")
+    assert "1 rollback" in format_recovery_log(log)
+
+
+def test_supervisor_exhausts_on_persistent_fault():
+    """persistent=True keys the fault stream off its own seed, so rekeyed
+    retries re-fire the same faults and the budget runs out."""
+    _, _, round_fn, fresh = _safl_setup()
+    faults = FaultConfig(num_clients=G, nan_rate=0.9, start=4, stop=6,
+                         persistent=True)
+    p0, s0 = fresh()
+    with pytest.raises(SupervisorError) as e:
+        run_supervised(_launcher(round_fn, faults), p0, s0, rounds=8,
+                       key=jax.random.key(0),
+                       config=SupervisorConfig(max_retries=2))
+    assert len(e.value.log) == 2     # every attempted rollback is logged
+    # first rollback resumes from the last good cursor; the repeat fault
+    # distrusts that snapshot and deepens to the previous one
+    assert e.value.log[0]["t_resume"] == 4
+    assert e.value.log[1]["t_resume"] <= 4
+
+
+def test_supervisor_clean_run_is_passthrough():
+    """No faults: the supervised result equals the plain scan bitwise and
+    the recovery log is empty."""
+    _, _, round_fn, fresh = _safl_setup()
+    key = jax.random.key(0)
+    pA, sA, hA = _run(round_fn, fresh, chunk_size=2)
+    p0, s0 = fresh()
+    pB, sB, hB, log = run_supervised(
+        _launcher(round_fn, None), p0, s0, rounds=8, key=key)
+    _eq((pA, sA), (pB, sB))
+    np.testing.assert_array_equal(hA["loss"], hB["loss"])
+    assert log == []
+    assert "clean run" in format_recovery_log(log)
+
+
+def test_chunk_is_bad_verdicts():
+    ok = {"loss": np.asarray([1.0, 0.5])}
+    assert chunk_is_bad(ok) == (False, "")
+    bad, why = chunk_is_bad({"loss": np.asarray([1.0, np.nan])})
+    assert bad and "offset 1" in why
+    bad, why = chunk_is_bad({"loss": np.asarray([1.0, 9.0])}, divergence=5.0)
+    assert bad and "threshold" in why
+    bad, why = chunk_is_bad({"loss": np.asarray([1.0]),
+                             "diverged": np.asarray([1.0])})
+    assert bad and "sentinel" in why
+
+
+def test_acceptance_nan_plus_forced_divergence(tmp_path):
+    """The ISSUE 7 acceptance scenario: a seeded run with persistent NaN
+    payloads (handled per-round by the sentinel) AND a forced mid-run
+    divergence -- an all-client Byzantine round under an SGD server, which
+    defeats the median norm rule (breakdown point) and blows the loss past
+    the divergence threshold -- completes via the supervisor with bounded
+    retries and finite params.  (An adaptive server normalizes Byzantine
+    scale away, hence the SGD server here.)  The divergence surfaces one
+    chunk AFTER the corrupting round (detection lag: a round's loss
+    predates its own update), so the first rollback cursor sits inside the
+    blast radius and the supervisor must deepen to the previous snapshot."""
+    from repro.core.adaptive import AdaConfig
+    from repro.core.packed import make_packing_plan
+    from repro.core.safl import SAFLConfig, safl_round
+
+    base = SAFLConfig(sketch=_SK, server=AdaConfig(name="sgd", lr=0.5),
+                      client_lr=0.05, local_steps=2)
+    plan = make_packing_plan(_SK, _params0())
+    key = jax.random.key(2)
+    kd0 = np.asarray(jax.random.key_data(key))
+
+    class Acceptance:
+        def spec(self, t, base_key):
+            codes = jnp.where(jnp.arange(G) == 2, NAN, OK)   # every round
+            blow = (jnp.all(jax.random.key_data(base_key) == kd0)
+                    & (t == 5))                              # original key
+            codes = jnp.where(blow, BYZANTINE, codes)
+            return _spec_from_codes(codes, jnp.float32(1e6))
+
+    rf = functools.partial(safl_round, base, _linear_loss, plan=plan,
+                           sentinel=SentinelConfig(norm_mult=10.0,
+                                                   divergence=1e3))
+    fresh = lambda: (_params0(), init_safl(base, _params0()))
+    p0, s0 = fresh()
+    p, s, hist, log = run_supervised(
+        _launcher(rf, Acceptance()), p0, s0, rounds=8, key=key,
+        config=SupervisorConfig(max_retries=4),
+        ckpt_path=str(tmp_path / "acc"))
+    assert _finite(p)
+    assert len(hist["loss"]) == 8 and np.isfinite(hist["loss"]).all()
+    assert (hist["loss"] < 1e3).all()
+    assert hist["n_rejected"].sum() == 8     # the NaN client, every round
+    assert [e["t_resume"] for e in log] == [6, 4]   # deepening rollback
+    assert all("sentinel" in e["reason"] for e in log)
+    assert os.path.exists(str(tmp_path / "acc") + ".npz")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (skipped when hypothesis is absent; the
+# deterministic twins above keep the module alive for the junit check)
+# ---------------------------------------------------------------------------
+
+def _table_strategy():
+    from hypothesis import strategies as st
+    row = st.tuples(*[st.sampled_from([OK, DROP, NAN, INF, BYZANTINE])
+                      for _ in range(G)])
+    return st.lists(row, min_size=1, max_size=3).map(tuple)
+
+
+def test_property_any_fault_pattern_keeps_params_finite():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+
+    @settings(max_examples=10, deadline=None)
+    @given(_table_strategy())
+    def prop(codes):
+        _, _, round_fn, fresh = _safl_setup()
+        rf = functools.partial(round_fn, sentinel=SENT)
+        p, s, h = _run(rf, fresh, rounds=4, chunk_size=4,
+                       faults=FaultTable(codes=codes, byzantine_scale=1e4))
+        assert _finite(p) and _finite(s)
+        assert np.isfinite(h["loss"]).all()
+
+    prop()
+
+
+def test_property_nan_equals_drop():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    row = st.tuples(*[st.sampled_from([OK, NAN]) for _ in range(G)])
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(row, min_size=1, max_size=3).map(tuple))
+    def prop(codes):
+        _, _, round_fn, fresh = _safl_setup()
+        rf = functools.partial(round_fn, sentinel=SENT)
+        dropped = tuple(tuple(DROP if c == NAN else c for c in r)
+                        for r in codes)
+        pA, sA, hA = _run(rf, fresh, rounds=4, chunk_size=4,
+                          faults=FaultTable(codes=codes))
+        pB, sB, hB = _run(rf, fresh, rounds=4, chunk_size=4,
+                          faults=FaultTable(codes=dropped))
+        _eq((pA, sA), (pB, sB))
+        np.testing.assert_array_equal(hA["loss"], hB["loss"])
+
+    prop()

@@ -44,8 +44,13 @@ from repro.core.packed import make_sharded_packing_plan
 from repro.core.safl import SAFLConfig, init_safl
 from repro.core.sketch import SketchConfig
 from repro.data import BigramLMData, LMDataConfig
-from repro.fed import (AsyncConfig, FixedCohort, FullParticipation,
-                       ImportanceParticipation, UniformParticipation)
+from repro.fed import (AsyncConfig, FaultConfig, FaultTable, FixedCohort,
+                       FullParticipation, ImportanceParticipation,
+                       SentinelConfig, UniformParticipation)
+from repro.fed import BYZANTINE as FAULT_BYZ
+from repro.fed import DROP as FAULT_DROP
+from repro.fed import NAN as FAULT_NAN
+from repro.fed import OK as FAULT_OK
 from repro.launch.mesh import _mesh
 from repro.launch.train import (_mesh_pspecs, init_mesh_async_state,
                                 make_fedopt_scan_fn, make_fedopt_train_step,
@@ -449,6 +454,143 @@ def test_vmap_fallback_matches_shard_map():
             train_mod._FORCE_VMAP_CLIENT_DELTAS = False
     np.testing.assert_array_equal(h1["loss"], h2["loss"])
     _assert_trees_equal((p1, o1), (p2, o2))
+
+
+# ---------------------------------------------------------------------------
+# faults + sentinels on the mesh (ISSUE 7, DESIGN §10)
+# ---------------------------------------------------------------------------
+
+def _fault_row(code, G, client=1):
+    return tuple(code if c == client else FAULT_OK for c in range(G))
+
+
+@needs8
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_mesh_neutral_faults_bitwise(topology):
+    """A neutral fault policy (all rates 0) on the mesh scan == the
+    hookless PR-4 trajectory, bit for bit -- the fault spec multiplies the
+    replicated weight vector by all-ones arrivals and the payload by 1.0,
+    and the guarded aggregation still pays exactly one payload psum."""
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    key = jax.random.key(7)
+    with use_mesh(mesh):
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology)
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology,
+                                   faults=FaultConfig(num_clients=G))
+    _assert_trees_equal((p1, o1), (p2, o2))
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    assert np.asarray(h2["n_dropped"]).sum() == 0
+
+
+@needs8
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_mesh_nan_equals_drop_bitwise(topology):
+    """Sentinel rejection of a NaN-corrupted client == dropping that
+    client, bitwise, on the mesh: per-client finite verdicts are made
+    globally consistent by one (G,)-stats psum over ALL mesh axes (model
+    axes combine chunks of a row, client axes merge disjoint rows), then
+    folded into the same replicated weight vector a dropout uses."""
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    key = jax.random.key(7)
+    sent = SentinelConfig(norm_mult=10.0)
+    with use_mesh(mesh):
+        p1, o1, h1 = run_mesh_scan(
+            MODEL, cfg, mesh, smp, *_fresh(cfg), rounds=3, key=key,
+            topology=topology, sentinel=sent,
+            faults=FaultTable(codes=(_fault_row(FAULT_NAN, G),) * 2))
+        p2, o2, h2 = run_mesh_scan(
+            MODEL, cfg, mesh, smp, *_fresh(cfg), rounds=3, key=key,
+            topology=topology, sentinel=sent,
+            faults=FaultTable(codes=(_fault_row(FAULT_DROP, G),) * 2))
+    _assert_trees_equal((p1, o1), (p2, o2))
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    assert np.isfinite(h1["loss"]).all()
+    for x in jax.tree.leaves(p1):
+        assert np.isfinite(np.asarray(x)).all()
+    assert np.asarray(h1["n_rejected"]).sum() == 2
+    assert np.asarray(h2["n_dropped"]).sum() == 2
+
+
+@needs8
+def test_mesh_byzantine_rejected_by_norm_sentinel():
+    """A Byzantine-scaled payload passes the finite check but its sketch
+    norm -- summed across model-parallel chunks by the same stats psum --
+    trips the median rule; the run matches the drop-masked twin bitwise."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    key = jax.random.key(7)
+    sent = SentinelConfig(norm_mult=10.0)
+    with use_mesh(mesh):
+        p1, o1, h1 = run_mesh_scan(
+            MODEL, cfg, mesh, smp, *_fresh(cfg), rounds=3, key=key,
+            topology=topology, sentinel=sent,
+            faults=FaultTable(codes=(_fault_row(FAULT_BYZ, G),) * 2,
+                              byzantine_scale=1e4))
+        p2, o2, h2 = run_mesh_scan(
+            MODEL, cfg, mesh, smp, *_fresh(cfg), rounds=3, key=key,
+            topology=topology, sentinel=sent,
+            faults=FaultTable(codes=(_fault_row(FAULT_DROP, G),) * 2))
+    _assert_trees_equal((p1, o1), (p2, o2))
+    assert np.asarray(h1["n_rejected"]).sum() == 2
+
+
+@needs8
+def test_mesh_buffered_guarded_nan_equals_drop():
+    """Through the mesh ring buffer: payloads are vetted BEFORE the push,
+    so a NaN generation never re-emits at later pops and the trajectory
+    (params/opt/loss) matches the drop twin bitwise.  Ring CONTENTS may
+    differ where weights are 0 (zeroed vs honest row), so the ring is
+    checked for finiteness, not equality."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology)
+    G = num_clients_of(mesh, topology)
+    acfg = AsyncConfig(max_delay=2, delay="stagger", staleness_alpha=0.5)
+    key = jax.random.key(3)
+    sent = SentinelConfig(norm_mult=10.0)
+
+    def fresh_async():
+        p, _ = _fresh(cfg)
+        return p, init_mesh_async_state(MODEL, cfg, acfg, mesh, p, topology)
+
+    with use_mesh(mesh):
+        p1, s1, h1 = run_mesh_scan(
+            MODEL, cfg, mesh, smp, *fresh_async(), rounds=4, key=key,
+            topology=topology, buffer=acfg, sentinel=sent,
+            faults=FaultTable(codes=(_fault_row(FAULT_NAN, G),) * 2))
+        p2, s2, h2 = run_mesh_scan(
+            MODEL, cfg, mesh, smp, *fresh_async(), rounds=4, key=key,
+            topology=topology, buffer=acfg, sentinel=sent,
+            faults=FaultTable(codes=(_fault_row(FAULT_DROP, G),) * 2))
+    _assert_trees_equal((p1, s1["opt"]), (p2, s2["opt"]))
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    assert np.isfinite(np.asarray(s1["buf"])).all()
+    assert np.asarray(h1["n_rejected"]).sum() == 2
+
+
+@needs8
+def test_mesh_fault_hook_guards():
+    """Build-time guards: sketch-space faults/sentinels cannot ride the
+    fedopt (sketch.kind='none') route, and a fault policy built for the
+    wrong client count is rejected before tracing."""
+    topology = "cross_silo"
+    mesh, cfg, smp = _mk(topology)
+    cfg_none = _mk(topology, "none")[1]
+    G = num_clients_of(mesh, topology)
+    with use_mesh(mesh):
+        p, o = _fresh(cfg)
+        with pytest.raises(ValueError, match="sketch"):
+            run_mesh_scan(MODEL, cfg_none, mesh, smp, p, o, rounds=2,
+                          key=jax.random.key(0), topology=topology,
+                          faults=FaultConfig(num_clients=G))
+        with pytest.raises(ValueError, match="clients"):
+            run_mesh_scan(MODEL, cfg, mesh, smp, p, o, rounds=2,
+                          key=jax.random.key(0), topology=topology,
+                          faults=FaultConfig(num_clients=16))
 
 
 # ---------------------------------------------------------------------------
