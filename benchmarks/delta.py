@@ -3,9 +3,11 @@
     python -m benchmarks.delta OLD.json NEW.json [--fail-on-missing]
 
 Prints one markdown-ish row per key present in either file: old value, new
-value, and the delta (a ratio for ``us_per_call`` rows, an exact-drift flag
-for ``*.final_loss`` convergence pins -- those are bitwise pins, so any
-drift is called out even when numerically tiny).  CI runs this after the
+value, and the delta (a ratio + percent change for ``us_per_call`` rows, an
+exact-drift flag for ``*.final_loss`` convergence pins -- those are bitwise
+pins, so any drift is called out even when numerically tiny).  Rows missing
+from either side are reported as NEW / MISSING, never crashed on, and
+non-numeric values degrade to a string comparison.  CI runs this after the
 bench job against (a) the committed baseline and (b) the previous run's
 uploaded artifact, so a PR's perf movement is readable from the job log
 without downloading anything.
@@ -21,8 +23,12 @@ import json
 import sys
 
 
-def _fmt_time(us: float) -> str:
-    return f"{us:,.0f}us"
+def _num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _fmt_time(us) -> str:
+    return f"{us:,.0f}us" if _num(us) else str(us)
 
 
 def delta_rows(old: dict, new: dict) -> list[tuple[str, str, str, str]]:
@@ -33,6 +39,9 @@ def delta_rows(old: dict, new: dict) -> list[tuple[str, str, str, str]]:
             rows.append((name, "-", _fmt_val(name, n), "NEW"))
         elif n is None:
             rows.append((name, _fmt_val(name, o), "-", "MISSING"))
+        elif not (_num(o) and _num(n)):
+            # malformed / non-numeric entries: compare as strings, never crash
+            rows.append((name, str(o), str(n), "=" if o == n else "CHANGED"))
         elif name.endswith(".final_loss"):
             drift = "exact" if n == o else f"DRIFT {n - o:+.3e}"
             rows.append((name, f"{o:.6f}", f"{n:.6f}", drift))
@@ -40,12 +49,15 @@ def delta_rows(old: dict, new: dict) -> list[tuple[str, str, str, str]]:
             rows.append((name, _fmt_time(o), _fmt_time(n),
                          "=" if n == o else "NEW-NONZERO"))
         else:
-            rows.append((name, _fmt_time(o), _fmt_time(n), f"{n / o:.2f}x"))
+            rows.append((name, _fmt_time(o), _fmt_time(n),
+                         f"{n / o:.2f}x ({(n - o) / o * 100:+.1f}%)"))
     return rows
 
 
-def _fmt_val(name: str, v: float) -> str:
-    return f"{v:.6f}" if name.endswith(".final_loss") else _fmt_time(v)
+def _fmt_val(name: str, v) -> str:
+    if name.endswith(".final_loss") and _num(v):
+        return f"{v:.6f}"
+    return _fmt_time(v)
 
 
 def main(argv: list[str]) -> int:

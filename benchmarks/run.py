@@ -52,6 +52,7 @@ from repro.fed import (AsyncConfig, FaultConfig, SentinelConfig,
                        make_async_round)
 from repro.launch.driver import make_chunk_fn
 from repro.models import ModelConfig, init_params, loss_fn
+from repro.obs.shards import span_stats
 
 QUICK = "--quick" in sys.argv
 JSON_OUT = "BENCH_sketch.json" if "--json" in sys.argv else None
@@ -66,13 +67,23 @@ _ROWS: dict[str, float] = {}
 
 
 def _emit(name: str, us: float, derived: str = "", json_row: bool = True,
-          final_loss: float | None = None) -> None:
+          final_loss: float | None = None, stats: dict | None = None) -> None:
     if json_row:
         _ROWS[name] = us
         if final_loss is not None:
             # convergence next to cost: the participation/async rows pin
             # their final training loss into the JSON trajectory too
             _ROWS[f"{name}.final_loss"] = final_loss
+        if stats:
+            # per-round wall-time spread over the timed runs, next to the
+            # min-of-N total (informational rows: excluded from the guard,
+            # since percentiles move with machine noise while min-of-N only
+            # ever tightens)
+            _ROWS[f"{name}.p50_us"] = stats["p50_us"]
+            _ROWS[f"{name}.p95_us"] = stats["p95_us"]
+    if stats:
+        derived = (derived + (";" if derived else "")
+                   + f"p50={stats['p50_us']:.0f}us;p95={stats['p95_us']:.0f}us")
     print(f"{name},{us:.0f},{derived}")
 
 # the paper's three experimental regimes, at laptop scale: a small LM plays
@@ -154,7 +165,9 @@ def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
            seed: int = 0, scan: bool = False, participation=None,
            async_cfg=None, faults=None, sentinel=None):
     """Train the bench model with one algorithm; returns (final_loss,
-    us_per_round, uplink_bits_per_round).
+    us_per_round, uplink_bits_per_round, stats) where ``stats`` is the
+    per-round wall-time p50/p95 over the timed scan runs (``None`` on the
+    host path, which is timed cold end-to-end in one pass).
 
     ``participation`` (a repro.fed sampling policy) and ``async_cfg`` (a
     repro.fed AsyncConfig, SAFL-family only) ride the scanned driver's
@@ -212,8 +225,9 @@ def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
             return losses, time.perf_counter() - t0
         run()                                          # compile the chunk
         losses, secs = run()                           # steady state
-        secs = min(secs, run()[1])                     # min-of-2: damp noise
-        return float(losses[-1]), secs / rounds * 1e6, bits
+        times = [secs, run()[1], run()[1]]             # min-of-3: damp noise
+        stats = span_stats([s / rounds for s in times])
+        return (float(losses[-1]), min(times) / rounds * 1e6, bits, stats)
 
     step = jax.jit(round_fn, donate_argnums=(0, 1))
     p, s = fresh()
@@ -227,7 +241,7 @@ def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
                        jax.random.fold_in(key, jnp.asarray(t, jnp.int32)))
         last = float(m["loss"])                        # blocks every round
     secs = time.perf_counter() - t0
-    return last, secs / rounds * 1e6, bits
+    return last, secs / rounds * 1e6, bits, None
 
 
 def fig1_resnet_scratch():
@@ -241,13 +255,13 @@ def fig1_resnet_scratch():
     cost."""
     for algo in ("safl", "fedopt", "fedavg", "fetchsgd", "topk_ef",
                  "onebit_adam", "cocktail", "marina"):
-        final, us, bits = _train(algo)
+        final, us, bits, _ = _train(algo)
         _emit(f"fig1/{algo}", us, f"final_loss={final:.4f};uplink_bits={bits};"
               f"cold_e2e_incl_compile_and_sampling")
-        final_s, us_s, _ = _train(algo, scan=True)
+        final_s, us_s, _, st = _train(algo, scan=True)
         _emit(f"fig1/{algo}_scan", us_s,
               f"final_loss={final_s:.4f};steady_state;host_cold_us={us:.0f};"
-              f"speedup={us / us_s:.2f}x")
+              f"speedup={us / us_s:.2f}x", stats=st)
 
 
 def fig1_participation():
@@ -261,16 +275,16 @@ def fig1_participation():
     times."""
     pol = UniformParticipation(CLIENTS, frac=0.25, seed=123)
     for algo in ("safl", "clipped"):
-        final, us, bits = _train(algo, scan=True, participation=pol)
+        final, us, bits, st = _train(algo, scan=True, participation=pol)
         _emit(f"fig1/{algo}_p0.25", us,
               f"final_loss={final:.4f};uplink_bits={bits};"
               f"cohort={pol.cohort_size}/{CLIENTS};steady_state",
-              final_loss=final)
+              final_loss=final, stats=st)
     acfg = AsyncConfig(max_delay=2, delay="uniform", staleness_alpha=0.5)
-    final, us, bits = _train("safl", scan=True, async_cfg=acfg)
+    final, us, bits, st = _train("safl", scan=True, async_cfg=acfg)
     _emit("fig1/safl_async", us,
           f"final_loss={final:.4f};uplink_bits={bits};max_delay=2;"
-          f"staleness_alpha=0.5;steady_state", final_loss=final)
+          f"staleness_alpha=0.5;steady_state", final_loss=final, stats=st)
 
 
 def fig1_faults():
@@ -285,17 +299,18 @@ def fig1_faults():
     faults = FaultConfig(num_clients=CLIENTS, drop_rate=0.05, nan_rate=0.05,
                          byzantine_rate=0.05)
     sent = SentinelConfig(norm_mult=10.0)
-    final, us, bits = _train("safl", scan=True, faults=faults, sentinel=sent)
+    final, us, bits, st = _train("safl", scan=True, faults=faults,
+                                 sentinel=sent)
     _emit("fig1/safl_faults", us,
           f"final_loss={final:.4f};uplink_bits={bits};"
           f"drop/nan/byz=0.05each;norm_mult=10;steady_state",
-          final_loss=final)
+          final_loss=final, stats=st)
 
 
 def fig2_finetune():
     """Paper Fig. 2: finetuning regime comparison."""
     for algo in ("safl", "onebit_adam", "fetchsgd"):
-        final, us, bits = _train(algo, seed=7, rounds=(5 if QUICK else 30))
+        final, us, bits, _ = _train(algo, seed=7, rounds=(5 if QUICK else 30))
         _emit(f"fig2/{algo}", us, f"final_loss={final:.4f}")
 
 
@@ -303,7 +318,7 @@ def fig3_sketch_sizes():
     """Paper Fig. 3/6: convergence vs sketch size (training error monotone
     in b; tiny b still converges)."""
     for ratio in (0.01, 0.05, 0.2, 1.0):
-        final, us, bits = _train("safl", sketch_ratio=ratio)
+        final, us, bits, _ = _train("safl", sketch_ratio=ratio)
         _emit(f"fig3/ratio_{ratio}", us, f"final_loss={final:.4f};bits={bits}")
 
 
@@ -454,8 +469,9 @@ def mesh_rows():
 
         def scan_row(chunk, fresh):
             """Steady-state timing of one scanned chunk fn: compile via a
-            warm-up run, min-of-2 to damp noise, ONE metric fetch per run.
-            The single timing harness for every scanned mesh row."""
+            warm-up run, min-of-3 to damp noise, ONE metric fetch per run.
+            The single timing harness for every scanned mesh row; also
+            returns the per-round p50/p95 over the timed runs."""
             def run():
                 p, s = fresh()
                 t0 = time.perf_counter()
@@ -466,8 +482,9 @@ def mesh_rows():
                 return losses, time.perf_counter() - t0
             run()                                   # compile
             losses, secs = run()
-            secs = min(secs, run()[1])
-            return float(losses[-1]), secs / rounds * 1e6
+            times = [secs, run()[1], run()[1]]
+            st = span_stats([s / rounds for s in times])
+            return float(losses[-1]), min(times) / rounds * 1e6, st
 
         for algo, kind in (("safl", "countsketch"), ("fedopt", "none")):
             cfg = SAFLConfig(
@@ -491,7 +508,7 @@ def mesh_rows():
             # scanned: one chunk executable, steady state
             chunk, _ = make_safl_scan_fn(MODEL, cfg, mesh, topo, sampler=smp,
                                          num_rounds=rounds)
-            final_scan, us_scan = scan_row(chunk, fresh)
+            final_scan, us_scan, st = scan_row(chunk, fresh)
 
             assert final_scan == final_host, (
                 f"mesh/{algo}: scanned final loss {final_scan!r} != "
@@ -503,7 +520,7 @@ def mesh_rows():
                   f"final_loss={final_scan:.4f};steady_state;parity=bitwise;"
                   f"host_cold_us={us_host:.0f};"
                   f"speedup={us_host / us_scan:.2f}x",
-                  final_loss=final_scan)
+                  final_loss=final_scan, stats=st)
 
         # --- federated realism on the mesh (ISSUE 5): partial cohorts and
         # FedBuff-style async staleness riding the SAME scanned mesh driver,
@@ -522,10 +539,10 @@ def mesh_rows():
         pol = UniformParticipation(G, frac=0.25, seed=123)
         chunk_p, _ = make_safl_scan_fn(MODEL, cfg, mesh, topo, sampler=smp,
                                        num_rounds=rounds, participation=pol)
-        final_p, us_p = scan_row(chunk_p, fresh_p)
+        final_p, us_p, st_p = scan_row(chunk_p, fresh_p)
         _emit("mesh/safl_p0.25", us_p,
               f"final_loss={final_p:.4f};cohort={pol.cohort_size}/{G};"
-              f"steady_state", final_loss=final_p)
+              f"steady_state", final_loss=final_p, stats=st_p)
 
         acfg = AsyncConfig(max_delay=2, delay="uniform", staleness_alpha=0.5)
         chunk_a, _ = make_safl_scan_fn(MODEL, cfg, mesh, topo, sampler=smp,
@@ -535,10 +552,10 @@ def mesh_rows():
             p = init_params(MODEL, jax.random.key(0))
             return p, init_mesh_async_state(MODEL, cfg, acfg, mesh, p, topo)
 
-        final_a, us_a = scan_row(chunk_a, fresh_a)
+        final_a, us_a, st_a = scan_row(chunk_a, fresh_a)
         _emit("mesh/safl_async", us_a,
               f"final_loss={final_a:.4f};max_delay=2;staleness_alpha=0.5;"
-              f"steady_state", final_loss=final_a)
+              f"steady_state", final_loss=final_a, stats=st_a)
 
         # fault injection + sketch-space sentinels on the scanned mesh
         # driver (DESIGN §10): per-client faults drawn on every device from
@@ -550,10 +567,10 @@ def mesh_rows():
         chunk_f, _ = make_safl_scan_fn(MODEL, cfg, mesh, topo, sampler=smp,
                                        num_rounds=rounds, faults=fts,
                                        sentinel=SentinelConfig(norm_mult=10.0))
-        final_f, us_f = scan_row(chunk_f, fresh_p)
+        final_f, us_f, st_f = scan_row(chunk_f, fresh_p)
         _emit("mesh/safl_faults", us_f,
               f"final_loss={final_f:.4f};drop/nan/byz=0.05each;norm_mult=10;"
-              f"steady_state", final_loss=final_f)
+              f"steady_state", final_loss=final_f, stats=st_f)
 
 
 def _guarded_row(name: str) -> bool:
@@ -564,6 +581,10 @@ def _guarded_row(name: str) -> bool:
     excluded from the 2x time budget here; ``_perf_guard`` separately holds
     the guarded rows' ``.final_loss`` keys to EXACT equality."""
     if name.endswith(".final_loss"):
+        return False
+    if name.endswith(".p50_us") or name.endswith(".p95_us"):
+        # percentile companions are informational: they track machine noise
+        # (and "_p0" below would otherwise catch e.g. fig1/safl_p0.25.p50_us)
         return False
     return (name.endswith("_scan") or name.endswith("_async")
             or name.endswith("_faults") or "_p0" in name)

@@ -20,6 +20,15 @@ the corrupted uplinks; --max-retries 3 wraps the run in the
 checkpoint-rollback supervisor, which rolls a diverged span back to the
 last good (t, key) cursor and re-runs it under a rekeyed fault stream,
 printing the recovery log at exit.
+
+Observability (DESIGN.md §11): --telemetry turns on the in-graph probes
+(delta/update norms, desketch residual, moment norms, effective cohort)
+and streams per-chunk JSONL metric shards + a run manifest into
+--telemetry-out (default <ckpt>_obs), then prints a compact end-of-run
+summary.  Render with ``python tools/obs_report.py <dir>``.  NOTE the
+probes are extra scan outputs, so a --telemetry trajectory is its own
+program family -- bit-comparable to other --telemetry runs, not to the
+probe-free default (the fusion caveat DESIGN §11 documents).
 """
 import argparse
 import functools
@@ -40,6 +49,7 @@ from repro.launch.driver import run_scan
 from repro.launch.supervisor import SupervisorConfig, format_recovery_log, \
     run_supervised
 from repro.models import ModelConfig, init_params, loss_fn
+from repro.obs import ShardWriter, Telemetry, format_summary, write_manifest
 from repro.optim import cosine
 
 ap = argparse.ArgumentParser()
@@ -68,6 +78,13 @@ ap.add_argument("--max-retries", type=int, default=0, metavar="N",
                 help="wrap the run in the checkpoint-rollback supervisor "
                 "with up to N rekeyed retries of a diverged span "
                 "(launch/supervisor.py; 0 = unsupervised)")
+ap.add_argument("--telemetry", action="store_true",
+                help="enable the in-graph telemetry probes and stream "
+                "per-chunk JSONL metric shards + a run manifest "
+                "(repro.obs, DESIGN.md §11)")
+ap.add_argument("--telemetry-out", default=None, metavar="PATH",
+                help="run directory for the telemetry shards/manifest "
+                "(default: <--ckpt>_obs)")
 ap.add_argument("--resume", action="store_true",
                 help="restart from --ckpt's (t, key) cursor and resume the "
                 "EXACT trajectory (pass the same model/algorithm flags): "
@@ -125,6 +142,20 @@ else:
 if sentinel is not None:
     # static config: binds like plan=, not a traced kwarg (DESIGN.md §10)
     round_fn = functools.partial(round_fn, sentinel=sentinel)
+
+telemetry = stream = None
+if args.telemetry:
+    telemetry = Telemetry()
+    if args.async_buffer == 0:
+        # static config, binds like plan=/sentinel=.  (The async round
+        # closure owns its multi-generation aggregation and takes no probe
+        # config; its arrival_weight/counter metrics still stream.)
+        round_fn = functools.partial(round_fn, telemetry=telemetry)
+    obs_dir = args.telemetry_out or (args.ckpt + "_obs")
+    stream = ShardWriter(obs_dir)
+    write_manifest(obs_dir, run="train_lm", sketch=safl.sketch,
+                   config={k: v for k, v in vars(args).items()})
+    print("telemetry: streaming metric shards to", obs_dir)
 
 faults = None
 if args.faults > 0:
@@ -184,12 +215,13 @@ if args.max_retries > 0:
             chunk_size=100, kwargs_fn=lambda t: {"lr_scale": sched(t)},
             on_chunk=on_chunk, participation=participation,
             buffer=async_cfg is not None, faults=faults,
-            start_round=start_round)
+            start_round=start_round, stream=stream)
 
     params, opt, hist, recovery = run_supervised(
         launch, params, opt, rounds=args.rounds, key=key,
         config=SupervisorConfig(max_retries=args.max_retries),
-        on_chunk=on_chunk, ckpt_path=args.ckpt, start_round=start_round)
+        on_chunk=on_chunk, ckpt_path=args.ckpt, start_round=start_round,
+        stream=stream)
     print(format_recovery_log(recovery))
 else:
     params, opt, hist = run_scan(
@@ -197,9 +229,11 @@ else:
         chunk_size=100, kwargs_fn=lambda t: {"lr_scale": sched(t)},
         on_chunk=on_chunk, participation=participation,
         buffer=async_cfg is not None, faults=faults,
-        start_round=start_round)
+        start_round=start_round, stream=stream)
     save_checkpoint(args.ckpt, {"params": params, "opt": opt,
                                 "cursor": {"t": jnp.asarray(args.rounds),
                                            "key": jax.random.key_data(key)}},
                     step=args.rounds)
+if stream is not None:
+    print(format_summary(stream.summary()))
 print("checkpoint saved to", args.ckpt + ".npz")

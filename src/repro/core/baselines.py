@@ -177,7 +177,8 @@ def _deltas_and_losses(cfg: BaselineConfig, loss_fn, params, batch, eta):
 
 def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
                    state: dict, batch: Pytree, key: jax.Array, *,
-                   plan=None, part_mask=None) -> tuple[Pytree, dict, dict]:
+                   plan=None, part_mask=None,
+                   telemetry=None) -> tuple[Pytree, dict, dict]:
     """One baseline round.  PURELY FUNCTIONAL: the input ``state`` dict is
     never mutated -- a fresh dict is returned each round, which is what makes
     this a safe ``lax.scan`` carry and a safe donation target in the
@@ -188,7 +189,12 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
     restricts the server aggregation to the round's sampled cohort
     (repro.fed): unsampled clients transmit nothing -- their error-feedback
     memories stay frozen and the server mean divides by the cohort size.  An
-    all-ones mask is bitwise the full-participation path.
+    all-ones mask is bitwise the full-participation path.  ``telemetry``
+    (static ``repro.obs.Telemetry``) adds probe scalars to the metrics --
+    for baselines: cohort-mean delta norm, effective cohort, moment norms
+    and, where the variant carries one (topk_ef / cocktail / cdadam /
+    onebit_adam ``err``, fetchsgd ``sk_err``), the error-feedback memory
+    norm -- the EF-drift observable of the compressed-Adam literature.
     """
     eta = jnp.asarray(cfg.client_lr, jnp.float32)
     rnd = state["round"]
@@ -368,7 +374,15 @@ def baseline_round(cfg: BaselineConfig, loss_fn: LossFn, params: Pytree,
     else:
         raise ValueError(f"unknown baseline {cfg.name}")
 
-    return params, {**state, "round": rnd + 1}, metrics
+    new_state = {**state, "round": rnd + 1}
+    if telemetry is not None:
+        # no update/residual probes here: most baselines apply a biased
+        # compressed update, so "desketch residual" is not their observable;
+        # delta/EF/moment norms and the cohort are
+        from repro.obs.telemetry import telemetry_probes
+        metrics.update(telemetry_probes(
+            telemetry, deltas=deltas, part_mask=part_mask, state=new_state))
+    return params, new_state, metrics
 
 
 def uplink_bits(cfg: BaselineConfig, params: Pytree) -> int:

@@ -48,27 +48,52 @@ def clip_delta(cfg: ClippedSAFLConfig, delta: Pytree) -> Pytree:
     return jax.tree.map(lambda x: x * scale, delta)
 
 
+def clip_trigger(cfg: ClippedSAFLConfig, delta: Pytree) -> jax.Array:
+    """1.0 if this client's pre-clip delta exceeded the clip radius (under
+    per-tensor clipping: if ANY tensor did) -- the ``clip_frac`` telemetry
+    probe averages this over the cohort."""
+    if cfg.per_tensor:
+        trig = [jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2) + 1e-12)
+                > cfg.clip_tau for x in jax.tree.leaves(delta)]
+        return jnp.any(jnp.stack(trig)).astype(jnp.float32)
+    sq = sum(jnp.sum(x.astype(jnp.float32) ** 2)
+             for x in jax.tree.leaves(delta))
+    return (jnp.sqrt(sq + 1e-12) > cfg.clip_tau).astype(jnp.float32)
+
+
 def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
                        params: Pytree, opt_state: dict, batch: Pytree,
                        round_key: jax.Array, *,
                        plan=None, part_mask=None, fault_spec=None,
-                       sentinel=None) -> tuple[Pytree, dict, dict]:
+                       sentinel=None,
+                       telemetry=None) -> tuple[Pytree, dict, dict]:
     """One SAFL round with per-client delta clipping (heavy-tail defense).
 
     batch leaves: (G, K, mb, ...) as in safl_round; ``plan``/``part_mask``/
-    ``fault_spec``/``sentinel`` as in safl_round (plan built once by
-    multi-round callers; the mask restricts the server mean to the sampled
-    cohort; faults and sentinels fuse into it per DESIGN.md §10 -- client
-    clipping bounds honest heavy tails, the sentinel handles adversarially
-    broken payloads, so SACFL composes both defenses)."""
+    ``fault_spec``/``sentinel``/``telemetry`` as in safl_round (plan built
+    once by multi-round callers; the mask restricts the server mean to the
+    sampled cohort; faults and sentinels fuse into it per DESIGN.md §10 --
+    client clipping bounds honest heavy tails, the sentinel handles
+    adversarially broken payloads, so SACFL composes both defenses).  With
+    telemetry on, this round additionally supplies the ``clip_frac`` probe:
+    the cohort fraction whose pre-clip delta norm exceeded tau."""
     base = cfg.base
     eta = jnp.asarray(base.client_lr, jnp.float32)
+    probe_clip = telemetry is not None and telemetry.clip
 
-    def one_client(mb):
-        delta, l = client_delta(base, loss_fn, params, mb, eta)
-        return clip_delta(cfg, delta), l
-
-    deltas, losses = jax.vmap(one_client)(batch)
+    # the trigger output only exists when its probe is on -- with telemetry
+    # off the vmapped program is byte-identical to the pinned one
+    if probe_clip:
+        def one_client(mb):
+            delta, l = client_delta(base, loss_fn, params, mb, eta)
+            return clip_delta(cfg, delta), l, clip_trigger(cfg, delta)
+        deltas, losses, triggers = jax.vmap(one_client)(batch)
+    else:
+        def one_client(mb):
+            delta, l = client_delta(base, loss_fn, params, mb, eta)
+            return clip_delta(cfg, delta), l
+        deltas, losses = jax.vmap(one_client)(batch)
+        triggers = None
     if plan is None:
         plan = make_packing_plan(base.sketch, params)
     rp = derive_round_params(plan, round_key)
@@ -87,4 +112,12 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
         new_params, new_opt = carry_if_empty(
             part_mask, (new_params, new_opt), (params, opt_state))
         counters = {**counters, "diverged": divergence_flag(sentinel, loss)}
-    return new_params, new_opt, {"loss": loss, **counters}
+    metrics = {"loss": loss, **counters}
+    if telemetry is not None:
+        from repro.obs.telemetry import telemetry_probes
+        metrics.update(telemetry_probes(
+            telemetry, deltas=deltas, update=update, part_mask=part_mask,
+            state=new_opt,
+            clip_frac=masked_mean(triggers, part_mask) if probe_clip
+            else None))
+    return new_params, new_opt, metrics

@@ -169,7 +169,7 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                eta_scale: jax.Array | float = 1.0,
                lr_scale: jax.Array | float = 1.0, *,
                plan=None, part_mask=None, fault_spec=None,
-               sentinel=None) -> tuple[Pytree, dict, dict]:
+               sentinel=None, telemetry=None) -> tuple[Pytree, dict, dict]:
     """One full SAFL round over all clients.
 
     ``batch`` leaves are shaped (G, K, mb, ...): G clients (sharded over the
@@ -184,7 +184,11 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     ``fed.faults.*.spec``) injects payload faults and ``sentinel`` (static
     ``fed.robust.SentinelConfig``, threaded like ``plan`` via partial)
     rejects bad payloads before aggregation -- the faults -> sentinels ->
-    mask fusion of DESIGN.md §10.  Returns (params, opt_state, metrics).
+    mask fusion of DESIGN.md §10.  ``telemetry`` (static
+    ``repro.obs.Telemetry``, threaded like ``plan`` via partial) adds the
+    selected probe scalars to the metrics; it is None by default because any
+    extra scan output shifts XLA fusion and hence the pinned f32
+    trajectories (DESIGN.md §11).  Returns (params, opt_state, metrics).
     """
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
 
@@ -231,6 +235,13 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
         counters = {**counters, "diverged": divergence_flag(sentinel, loss)}
 
     metrics = {"loss": loss, **counters}
+    if telemetry is not None:
+        # part_mask here is the EFFECTIVE mask (guard_uplink rebinds it), so
+        # the probes and the aggregation see the same cohort
+        from repro.obs.telemetry import telemetry_probes
+        metrics.update(telemetry_probes(
+            telemetry, deltas=deltas, update=update, part_mask=part_mask,
+            state=new_opt))
     return new_params, new_opt, metrics
 
 
@@ -239,7 +250,7 @@ def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                  eta_scale: jax.Array | float = 1.0,
                  lr_scale: jax.Array | float = 1.0, *,
                  part_mask=None, fault_spec=None,
-                 sentinel=None) -> tuple[Pytree, dict, dict]:
+                 sentinel=None, telemetry=None) -> tuple[Pytree, dict, dict]:
     """Uncompressed FedOPT (Reddi et al. 2020) round: the paper's
     'ambient-dimension' reference line (legend 4e7 / 1e8).  Identical to
     safl_round with the identity compressor -- clients uplink raw deltas,
@@ -256,7 +267,15 @@ def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     update = masked_mean_tree(deltas, part_mask)
     params, opt_state = apply_update(cfg.server, opt_state, params, update,
                                      lr_scale=lr_scale)
-    return params, opt_state, {"loss": masked_mean(losses, part_mask)}
+    metrics = {"loss": masked_mean(losses, part_mask)}
+    if telemetry is not None:
+        # the uncompressed update IS the cohort-mean delta, so the desketch
+        # residual probe reads exactly 0 -- the reference line
+        from repro.obs.telemetry import telemetry_probes
+        metrics.update(telemetry_probes(
+            telemetry, deltas=deltas, update=update, part_mask=part_mask,
+            state=opt_state))
+    return params, opt_state, metrics
 
 
 def init_safl(cfg: SAFLConfig, params: Pytree) -> dict:

@@ -47,15 +47,30 @@ evaluated in the scan body and passed to the round as ``fault_spec``
 
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.telemetry import PROBE_KEYS
+
 Pytree = Any
 # (params, state, batch, round_key, **kwargs) -> (params, state, metrics)
 RoundFn = Callable[..., tuple[Pytree, dict, dict]]
+
+# counter keys the guarded/buffered rounds emit next to the loss (fed/robust
+# n_dropped/n_rejected, the sentinel's diverged flag, the async buffer's
+# arrival_weight)
+COUNTER_KEYS = ("n_dropped", "n_rejected", "diverged", "arrival_weight")
+
+# every key a history dict / metric shard row may carry -- the single source
+# of truth shared by this driver, the mesh driver (launch/train.py), the
+# bench harness and tools/check_telemetry.py.  Which subset actually appears
+# depends on the hooks bound into the round fn (guard counters) and on the
+# static Telemetry config (probe keys; repro.obs.telemetry).
+HISTORY_KEYS = ("loss", "uplink_bits") + COUNTER_KEYS + PROBE_KEYS
 
 
 def _with_bits(metrics: dict, bits_per_round: Optional[int],
@@ -143,7 +158,7 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
              kwargs_fn=None, bits_per_round: Optional[int] = None,
              donate: bool = True, on_chunk=None, participation=None,
              buffer: bool = False, faults=None,
-             start_round: int = 0) -> tuple[Pytree, dict, dict]:
+             start_round: int = 0, stream=None) -> tuple[Pytree, dict, dict]:
     """Run ``rounds`` federated rounds on device in scanned chunks.
 
     * ``sampler`` provides ``init_state()`` and ``sample(state, t)`` (see
@@ -162,10 +177,23 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
       cohorts, delays, sketch operators) is a pure function of the absolute
       round index under ``key``, a resumed run replays the uninterrupted
       trajectory bit-identically (tests/test_resume.py).
+    * ``stream`` (optional) is a ``repro.obs.shards.ShardWriter``: each
+      chunk's history is fetched with an async device->host copy and
+      appended as one JSONL metrics shard plus a wall-time span event
+      (``compile=True`` marks the first dispatch of a chunk length), and the
+      in-memory history accumulation is SKIPPED -- the returned ``history``
+      is ``{}`` and the shard files are the record.  ``on_chunk`` still
+      receives each chunk's host-side history either way.
 
     Returns ``(params, state, history)`` with ``history`` a dict of
-    host-side ``(rounds - start_round,)`` arrays (``loss``, optionally
-    ``uplink_bits``).
+    host-side ``(rounds - start_round,)`` arrays.  ``loss`` is always
+    present; ``uplink_bits`` when ``bits_per_round`` is set; the
+    ``COUNTER_KEYS`` subset the bound round emits (``n_dropped`` /
+    ``n_rejected`` from the uplink guard, ``diverged`` from the sentinel,
+    ``arrival_weight`` from the async buffer); and the ``PROBE_KEYS``
+    subset selected by a static ``Telemetry`` config bound into the round
+    (``repro.obs.telemetry``).  ``HISTORY_KEYS`` (module level) is the
+    single source of truth for the full key set.
     """
     chunk_size = int(chunk_size) or int(rounds)
     data_state = sampler.init_state()
@@ -174,19 +202,28 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     t = int(start_round)
     while t < rounds:
         n = min(chunk_size, rounds - t)
-        if n not in compiled:       # tail chunk of a different length re-jits
+        fresh = n not in compiled
+        if fresh:                   # tail chunk of a different length re-jits
             compiled[n] = make_chunk_fn(
                 round_fn, sampler, n, kwargs_fn=kwargs_fn,
                 bits_per_round=bits_per_round, donate=donate,
                 participation=participation, buffer=buffer, faults=faults)
+        t_wall = time.perf_counter()
         params, state, data_state, hist = compiled[n](
             params, state, data_state, key, jnp.asarray(t, jnp.int32))
-        hist = jax.tree.map(np.asarray, hist)      # ONE fetch per chunk
-        hists.append(hist)
+        if stream is not None:
+            from repro.obs.shards import host_fetch
+            hist = host_fetch(hist)            # async copy, ONE fetch
+            dt = time.perf_counter() - t_wall
+            stream.write_chunk(t, hist)
+            stream.write_span(t, t + n, dt, compile=fresh)
+        else:
+            hist = jax.tree.map(np.asarray, hist)  # ONE fetch per chunk
+            hists.append(hist)
         t += n
         if on_chunk is not None:
             on_chunk(t, params, state, hist)
-    if not hists:       # resumed at start_round == rounds: nothing to run
+    if not hists:   # streamed, or resumed at start_round == rounds
         return params, state, {}
     history = jax.tree.map(lambda *xs: np.concatenate(xs), *hists)
     return params, state, history

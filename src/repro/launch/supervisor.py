@@ -125,7 +125,7 @@ def _finite_tree(tree: Pytree) -> bool:
 def run_supervised(launch: Callable, params: Pytree, state: Pytree, *,
                    rounds: int, key, config: SupervisorConfig | None = None,
                    on_chunk=None, ckpt_path: str | None = None,
-                   start_round: int = 0):
+                   start_round: int = 0, stream=None):
     """Supervise a chunked driver run with rollback-and-rekey retries.
 
     ``launch(params, state, *, key, start_round, on_chunk) ->
@@ -146,6 +146,15 @@ def run_supervised(launch: Callable, params: Pytree, state: Pytree, *,
     examples/train_lm.py resumes from.  ``start_round`` seeds the root
     snapshot for a run resumed from a checkpoint cursor: rollbacks bottom
     out there, never before the restored state's round.
+
+    ``stream`` (a ``repro.obs.shards.ShardWriter``, normally the SAME one
+    handed to the underlying driver) makes the supervisor emit each
+    rollback as a structured ``recovery`` event into the run's event log --
+    retry count, fault/resume cursors, rollback depth, rekey tag -- and
+    skip its own in-memory history stitching (the shard files are the
+    record; a retried span re-emits its rounds in new shards and readers
+    resolve duplicate ``t`` last-wins, with the recovery events marking
+    where that happened).  The returned ``history`` is then ``{}``.
 
     Returns ``(params, state, history, recovery_log)``.
     """
@@ -168,10 +177,12 @@ def run_supervised(launch: Callable, params: Pytree, state: Pytree, *,
             # detection lag: the last round's loss predates its own poisoned
             # server update -- never snapshot a non-finite cursor
             raise _ChunkFault(t_done, "non-finite params at chunk end")
+        t_start = snaps[-1]["t"]
         snaps.append({"t": t_done, "params": hp, "state": hs})
         if len(snaps) > config.keep_snapshots:
             del snaps[1]          # keep the initial state as the root
-        hists.append((snaps[-2]["t"] if len(snaps) > 1 else 0, t_done, hist))
+        if stream is None:        # streamed runs: the shards are the record
+            hists.append((t_start, t_done, hist))
         if ckpt_path is not None:
             from repro.checkpoint import save_checkpoint
             save_checkpoint(
@@ -210,6 +221,12 @@ def run_supervised(launch: Callable, params: Pytree, state: Pytree, *,
             cur_key = jax.random.fold_in(base_key, _REKEY_TAG + retries)
             log.append({"retry": retries, "t_fault": int(f.t_done),
                         "t_resume": int(t_res), "reason": f.reason})
+            if stream is not None:
+                stream.write_event(
+                    "recovery", retry=retries, t_fault=int(f.t_done),
+                    t_resume=int(t_res),
+                    depth=int(f.t_done) - int(t_res), reason=f.reason,
+                    rekey=_REKEY_TAG + retries)
             continue
         history = (jax.tree.map(lambda *xs: np.concatenate(xs),
                                 *[h for _, _, h in hists])

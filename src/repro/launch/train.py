@@ -21,6 +21,7 @@ Run as a module for a real (CPU-scale) training run:
 from __future__ import annotations
 
 import functools
+import time
 from typing import Any, Callable
 
 import jax
@@ -634,7 +635,8 @@ def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
 
 def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                      topology: str = "cross_device", *, participation=None,
-                     buffer=None, faults=None, sentinel=None):
+                     buffer=None, faults=None, sentinel=None,
+                     telemetry=None):
     """The typed-key SAFL mesh round:
     ``core(params, state, batch, round_key, **hook_kwargs) ->
     (params, state, loss_or_metrics)``.
@@ -654,7 +656,15 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     threads the traced per-round ``fault_spec``).  Hookless and
     participation/buffer-only cores return a loss SCALAR (the PR-4/PR-5
     contract, bitwise-pinned); fault/sentinel cores return a metrics dict
-    (``loss`` + ``n_dropped``/``n_rejected``/``diverged`` counters)."""
+    (``loss`` + ``n_dropped``/``n_rejected``/``diverged`` counters).
+
+    ``telemetry`` (static ``repro.obs.Telemetry``) switches any core to the
+    metrics-dict return and adds the probe scalars (DESIGN.md §11).  The
+    Δ̄-based probes are computed OUTSIDE the sketch shard_map from the
+    sharded global delta tree, so GSPMD inserts the O(d) reductions they
+    need -- an explicitly opt-in cost the compressed uplink never pays.
+    ``telemetry=None`` (the default) leaves every program byte-identical to
+    the pinned trajectories."""
     abstract, pspecs, plan = _mesh_plan(model_cfg, safl_cfg, mesh, topology)
     G = num_clients_of(mesh, topology)
     guarded = faults is not None or sentinel is not None
@@ -689,6 +699,19 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
         eta = jnp.asarray(safl_cfg.client_lr, jnp.float32)
         deltas, losses = client_deltas_sharded(
             model_cfg, safl_cfg, mesh, topology, params, batch, eta)
+
+        def _tel(m, *, update, st, mask):
+            # telemetry=None is the identity on the return value, so the
+            # disabled-path programs stay byte-identical (static gate)
+            if telemetry is None:
+                return m
+            from repro.obs.telemetry import telemetry_probes
+            m = dict(m) if isinstance(m, dict) else {"loss": m}
+            m.update(telemetry_probes(telemetry, deltas=deltas,
+                                      update=update, part_mask=mask,
+                                      state=st))
+            return m
+
         if buffer is not None:
             if not guarded:
                 update, buf, bufw = sharded_sketch_buffered(
@@ -697,8 +720,10 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                     part_mask=part_mask)
                 params, opt = apply_update(
                     safl_cfg.server, state["opt"], params, update)
-                return (params, {"opt": opt, "buf": buf, "bufw": bufw},
-                        masked_mean(losses, part_mask))
+                new_state = {"opt": opt, "buf": buf, "bufw": bufw}
+                return (params, new_state,
+                        _tel(masked_mean(losses, part_mask), update=update,
+                             st=new_state, mask=part_mask))
             update, buf, bufw, W, n_rej = sharded_sketch_buffered(
                 mesh, buffer, plan, pspecs, deltas, state["buf"],
                 state["bufw"], key, base_key, t, topology,
@@ -717,8 +742,10 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                     lambda nw, o: jnp.where(W > 0, nw, o),
                     (new_params, opt), (params, state["opt"]))
                 metrics["diverged"] = divergence_flag(sentinel, loss)
-            return (new_params, {"opt": opt, "buf": buf, "bufw": bufw},
-                    metrics)
+            new_state = {"opt": opt, "buf": buf, "bufw": bufw}
+            return (new_params, new_state,
+                    _tel(metrics, update=update, st=new_state,
+                         mask=part_mask))
         if guarded:
             update, eff_w, n_rej = _sharded_sketch_guarded(
                 mesh, plan, pspecs, deltas, key, topology, part_mask,
@@ -735,7 +762,8 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                 new_params, new_state = carry_if_empty(
                     eff_mask, (new_params, new_state), (params, state))
                 metrics["diverged"] = divergence_flag(sentinel, loss)
-            return new_params, new_state, metrics
+            return new_params, new_state, _tel(metrics, update=update,
+                                               st=new_state, mask=eff_mask)
         if safl_cfg.sketch.kind == "none":
             # FedOpt baseline: raw-delta mean = O(d) all-reduce over clients
             if part_mask is None:
@@ -747,9 +775,10 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                 mesh, safl_cfg.sketch, pspecs, deltas, key, topology,
                 plan=plan, part_mask=part_mask)
         params, state = apply_update(safl_cfg.server, state, params, update)
-        if part_mask is None:
-            return params, state, jnp.mean(losses)
-        return params, state, masked_mean(losses, part_mask)
+        loss = (jnp.mean(losses) if part_mask is None
+                else masked_mean(losses, part_mask))
+        return params, state, _tel(loss, update=update, st=state,
+                                   mask=part_mask)
 
     return core, pspecs
 
@@ -757,7 +786,7 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
 def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                          topology: str = "cross_device", *,
                          participation=None, buffer=None, faults=None,
-                         sentinel=None):
+                         sentinel=None, telemetry=None):
     """SAFL round on the mesh.  batch leaves: (G, K, mb, ...) with G = number
     of FL clients (data-parallel groups or pods, per ``topology``).
 
@@ -774,7 +803,7 @@ def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology,
                                     participation=participation,
                                     buffer=buffer, faults=faults,
-                                    sentinel=sentinel)
+                                    sentinel=sentinel, telemetry=telemetry)
     hooked = (participation is not None or buffer is not None
               or faults is not None or sentinel is not None)
     if not hooked:
@@ -803,12 +832,12 @@ def _fedopt_cfg(safl_cfg: SAFLConfig) -> SAFLConfig:
 def make_fedopt_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                            topology: str = "cross_device", *,
                            participation=None, buffer=None, faults=None,
-                           sentinel=None):
+                           sentinel=None, telemetry=None):
     """Uncompressed FedOPT baseline: raw-delta mean = O(d) all-reduce."""
     return make_safl_train_step(model_cfg, _fedopt_cfg(safl_cfg), mesh,
                                 topology, participation=participation,
                                 buffer=buffer, faults=faults,
-                                sentinel=sentinel)
+                                sentinel=sentinel, telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -833,7 +862,7 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                       topology: str = "cross_device", *, sampler,
                       num_rounds: int, donate: bool = True,
                       participation=None, buffer=None, faults=None,
-                      sentinel=None):
+                      sentinel=None, telemetry=None):
     """Jit ``num_rounds`` SAFL mesh rounds as ONE ``lax.scan`` dispatch.
 
     The scan sits OUTSIDE the shard_map round: each scanned step draws its
@@ -868,7 +897,7 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology,
                                     participation=participation,
                                     buffer=buffer, faults=faults,
-                                    sentinel=sentinel)
+                                    sentinel=sentinel, telemetry=telemetry)
 
     def chunk(params, opt_state, data_state, key_data, t0):
         def body(carry, t):
@@ -897,14 +926,15 @@ def make_fedopt_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                         topology: str = "cross_device", *, sampler,
                         num_rounds: int, donate: bool = True,
                         participation=None, buffer=None, faults=None,
-                        sentinel=None):
+                        sentinel=None, telemetry=None):
     """Scanned uncompressed FedOPT mesh rounds (``sketch.kind == "none"``:
     the raw-delta O(d) all-reduce inside the same scan layout)."""
     return make_safl_scan_fn(model_cfg, _fedopt_cfg(safl_cfg), mesh,
                              topology, sampler=sampler,
                              num_rounds=num_rounds, donate=donate,
                              participation=participation, buffer=buffer,
-                             faults=faults, sentinel=sentinel)
+                             faults=faults, sentinel=sentinel,
+                             telemetry=telemetry)
 
 
 def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
@@ -912,7 +942,7 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
                   topology: str = "cross_device", chunk_size: int = 0,
                   start_round: int = 0, donate: bool = True, on_chunk=None,
                   participation=None, buffer=None, faults=None,
-                  sentinel=None):
+                  sentinel=None, telemetry=None, stream=None):
     """Run ``rounds`` mesh rounds in scanned chunks (the multi-pod analogue
     of ``launch.driver.run_scan``).
 
@@ -935,8 +965,15 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
     ``diverged`` counters next to the loss, which is what the rollback
     supervisor (``launch.supervisor``) watches.
 
+    ``telemetry`` (static ``repro.obs.Telemetry``) adds the in-graph probe
+    keys to the history; ``stream`` (a ``repro.obs.shards.ShardWriter``)
+    switches to streamed per-chunk JSONL shards + wall-time span events and
+    skips the in-memory accumulation, exactly as in
+    ``launch.driver.run_scan`` (the returned ``history`` is then ``{}``).
+
     Returns ``(params, opt_state, history)`` with host-side
-    ``(rounds - start_round,)`` arrays."""
+    ``(rounds - start_round,)`` arrays (key set:
+    ``launch.driver.HISTORY_KEYS``)."""
     chunk_size = int(chunk_size) or int(rounds)
     data_state = sampler.init_state()
     # host copy of the (invariant) base key: the donated key carry comes
@@ -948,20 +985,30 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
     t = int(start_round)
     while t < rounds:
         n = min(chunk_size, rounds - t)
-        if n not in compiled:   # tail chunk of a different length re-jits
+        fresh = n not in compiled
+        if fresh:               # tail chunk of a different length re-jits
             compiled[n], _ = make_safl_scan_fn(
                 model_cfg, safl_cfg, mesh, topology, sampler=sampler,
                 num_rounds=n, donate=donate, participation=participation,
-                buffer=buffer, faults=faults, sentinel=sentinel)
+                buffer=buffer, faults=faults, sentinel=sentinel,
+                telemetry=telemetry)
+        t_wall = time.perf_counter()
         params, opt_state, data_state, _, hist = compiled[n](
             params, opt_state, data_state, jnp.asarray(kd_host),
             jnp.asarray(t, jnp.int32))
-        hist = jax.tree.map(np.asarray, hist)      # ONE fetch per chunk
-        hists.append(hist)
+        if stream is not None:
+            from repro.obs.shards import host_fetch
+            hist = host_fetch(hist)            # async copy, ONE fetch
+            dt = time.perf_counter() - t_wall
+            stream.write_chunk(t, hist)
+            stream.write_span(t, t + n, dt, compile=fresh)
+        else:
+            hist = jax.tree.map(np.asarray, hist)  # ONE fetch per chunk
+            hists.append(hist)
         t += n
         if on_chunk is not None:
             on_chunk(t, params, opt_state, hist)
-    if not hists:       # resumed at start_round == rounds: nothing to run
+    if not hists:   # streamed, or resumed at start_round == rounds
         return params, opt_state, {}
     history = jax.tree.map(lambda *xs: np.concatenate(xs), *hists)
     return params, opt_state, history

@@ -1,0 +1,14 @@
+"""Observability layer: in-graph probes, streamed metric shards, run
+manifests, and the profiling report (DESIGN.md §11)."""
+
+from repro.obs.manifest import REQUIRED_KEYS, write_manifest
+from repro.obs.shards import (ShardWriter, format_summary, host_fetch,
+                              span_stats)
+from repro.obs.telemetry import (PROBE_KEYS, Telemetry, effective_cohort,
+                                 state_norms, telemetry_probes, tree_norm)
+
+__all__ = [
+    "PROBE_KEYS", "REQUIRED_KEYS", "ShardWriter", "Telemetry",
+    "effective_cohort", "format_summary", "host_fetch", "span_stats",
+    "state_norms", "telemetry_probes", "tree_norm", "write_manifest",
+]

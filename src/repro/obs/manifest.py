@@ -1,0 +1,97 @@
+"""Run manifests: one JSON record of everything a telemetry run ran under
+(DESIGN.md §11).
+
+A manifest pins the run's software stack (jax/jaxlib versions, backend,
+device count), its configuration (model/algorithm config, sketch family,
+mesh topology) and -- when a committed BENCH_sketch.json is reachable --
+the guard's ``*.final_loss`` convergence pins in force at run time, so a
+shard directory is interpretable long after the code moved on.
+
+``tools/check_telemetry.py`` validates ``REQUIRED_KEYS``;
+``tools/obs_report.py`` renders the manifest at the top of its report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import sys
+from typing import Any
+
+# every manifest must carry these (schema contract of check_telemetry)
+REQUIRED_KEYS = ("kind", "run", "jax", "jaxlib", "backend", "device_count")
+
+
+def _jsonable(x: Any) -> Any:
+    """Best-effort coercion of configs (dataclasses, numpy scalars, pytrees
+    of plain containers) into JSON-serializable values."""
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        return {f.name: _jsonable(getattr(x, f.name))
+                for f in dataclasses.fields(x)}
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    if hasattr(x, "item") and getattr(x, "ndim", 1) == 0:
+        return x.item()
+    return repr(x)
+
+
+def write_manifest(out_dir: str, *, run: str, config=None, mesh=None,
+                   topology: str | None = None, sketch=None,
+                   guard_pins: str | None = "BENCH_sketch.json",
+                   extra: dict | None = None) -> str:
+    """Write ``out_dir/manifest.json``; returns its path.
+
+    ``mesh`` is a ``jax.sharding.Mesh`` (axis sizes are recorded),
+    ``sketch`` a ``SketchConfig``, ``config`` any dataclass/dict of run
+    parameters.  ``guard_pins`` names a BENCH_sketch.json whose
+    ``*.final_loss`` keys are embedded when the file exists (pass ``None``
+    to skip)."""
+    import jax
+    try:
+        import jaxlib
+        jaxlib_ver = jaxlib.__version__
+    except Exception:  # pragma: no cover - jaxlib always ships with jax
+        jaxlib_ver = ""
+    man: dict[str, Any] = {
+        "kind": "manifest",
+        "run": run,
+        "jax": jax.__version__,
+        "jaxlib": jaxlib_ver,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "argv": list(sys.argv),
+    }
+    if topology is not None:
+        man["topology"] = topology
+    if mesh is not None:
+        man["mesh"] = {str(a): int(n) for a, n in dict(mesh.shape).items()}
+    if sketch is not None:
+        man["sketch"] = _jsonable(sketch)
+    if config is not None:
+        man["config"] = _jsonable(config)
+    if guard_pins and os.path.exists(guard_pins):
+        try:
+            with open(guard_pins) as f:
+                rows = json.load(f)
+            pins = {k: v for k, v in rows.items()
+                    if k.endswith(".final_loss")}
+            if pins:
+                man["guard_pins"] = pins
+        except (OSError, json.JSONDecodeError, AttributeError):
+            pass
+    if extra:
+        man.update(_jsonable(extra))
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "manifest.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(man, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path

@@ -1,0 +1,145 @@
+"""Streamed per-chunk metric shards + run event log (DESIGN.md §11).
+
+Closes the PR-4 open item: instead of accumulating every chunk's stacked
+metric history in host memory for the lifetime of a run, the scanned
+drivers hand each chunk's history to a ``ShardWriter``, which
+
+* starts the device->host copy ASYNCHRONOUSLY (``copy_to_host_async`` on
+  every history leaf, so the transfer overlaps the next chunk's dispatch),
+* appends one JSONL *shard* per chunk (``metrics-00000.jsonl``, one row
+  per round: ``{"kind": "metrics", "t": <absolute round>, "loss": ...,
+  <probe/counter keys>}``), and
+* keeps only O(1) running aggregates (per-key sum/count/last) so an
+  end-of-run summary needs no replay.
+
+Because every per-round stream is a pure function of the absolute round
+index, the concatenated shard rows of a chunked run are identical to a
+single-dispatch run's -- shard boundaries are an I/O artifact, not a
+numeric one (tests/test_obs.py pins this).
+
+``events.jsonl`` carries the non-metric streams in the same directory:
+wall-time spans per chunk (``{"kind": "span", "t0", "t1", "seconds",
+"compile"}`` -- ``compile: true`` marks the first use of a chunk-length
+executable, so compile and steady-state cost separate cleanly) and the
+supervisor's recovery events (``{"kind": "recovery", "retry", "t_fault",
+"t_resume", "depth", "reason", "rekey"}``).  Under the rollback supervisor
+a retried span re-emits its rounds in NEW shards; recovery events mark the
+rollbacks, and readers resolve duplicate ``t`` values as last-wins.
+
+``tools/check_telemetry.py`` validates the formats; ``tools/obs_report.py``
+renders a run directory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+Pytree = Any
+
+
+def host_fetch(tree: Pytree) -> Pytree:
+    """Device->host copy of a metric history, transfer started async on
+    every leaf before the first blocking read."""
+    import jax
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "copy_to_host_async"):
+            x.copy_to_host_async()
+    return jax.tree.map(np.asarray, tree)
+
+
+def span_stats(per_round_seconds) -> dict:
+    """p50/p95 (in us) over a set of per-round wall-time samples -- the
+    summary benchmarks/run.py pins next to each ``_scan`` total."""
+    a = np.asarray(list(per_round_seconds), np.float64)
+    if a.size == 0:
+        return {}
+    return {"p50_us": float(np.percentile(a, 50) * 1e6),
+            "p95_us": float(np.percentile(a, 95) * 1e6)}
+
+
+class ShardWriter:
+    """Append-only JSONL shard writer for one run directory.
+
+    ``write_chunk(t0, hist)`` takes a chunk's stacked history (dict of
+    (n,) arrays, already on host -- pair with ``host_fetch``) and writes
+    one metrics shard; ``write_span``/``write_event`` append to the shared
+    ``events.jsonl``.  ``summary()`` returns the O(1) running aggregates.
+    """
+
+    def __init__(self, out_dir: str):
+        os.makedirs(out_dir, exist_ok=True)
+        self.out_dir = out_dir
+        self.rounds = 0
+        self.recoveries = 0
+        self._shard = 0
+        self._events_path = os.path.join(out_dir, "events.jsonl")
+        self._sums: dict[str, tuple[float, int]] = {}
+        self._last: dict[str, float] = {}
+
+    def write_chunk(self, t0: int, hist: dict) -> str:
+        keys = sorted(hist)
+        if not keys:
+            return ""
+        n = int(np.asarray(hist[keys[0]]).shape[0])
+        path = os.path.join(self.out_dir, f"metrics-{self._shard:05d}.jsonl")
+        cols = {k: np.asarray(hist[k], np.float64) for k in keys}
+        with open(path, "w") as f:
+            for i in range(n):
+                row = {"kind": "metrics", "t": int(t0) + i}
+                for k in keys:
+                    row[k] = float(cols[k][i])
+                f.write(json.dumps(row) + "\n")
+        self._shard += 1
+        self.rounds += n
+        for k in keys:
+            tot, cnt = self._sums.get(k, (0.0, 0))
+            self._sums[k] = (tot + float(np.nansum(cols[k])),
+                             cnt + int(cols[k].size))
+            self._last[k] = float(cols[k][-1])
+        return path
+
+    def write_span(self, t0: int, t1: int, seconds: float,
+                   compile: bool = False) -> None:
+        self.write_event("span", t0=int(t0), t1=int(t1),
+                         seconds=float(seconds), compile=bool(compile))
+
+    def write_event(self, kind: str, **fields) -> None:
+        if kind == "recovery":
+            self.recoveries += 1
+        with open(self._events_path, "a") as f:
+            f.write(json.dumps({"kind": kind, **fields}) + "\n")
+
+    def mean(self, key: str):
+        tot, cnt = self._sums.get(key, (0.0, 0))
+        return tot / cnt if cnt else None
+
+    def total(self, key: str):
+        return self._sums.get(key, (None, 0))[0]
+
+    def last(self, key: str):
+        return self._last.get(key)
+
+    def summary(self) -> dict:
+        return {"rounds": self.rounds,
+                "shards": self._shard,
+                "final_loss": self.last("loss"),
+                "mean_residual": self.mean("residual"),
+                "total_rejected": self.total("n_rejected"),
+                "recoveries": self.recoveries}
+
+
+def format_summary(s: dict) -> str:
+    """Compact end-of-run line (examples/train_lm.py prints this)."""
+    parts = [f"rounds={s.get('rounds', 0)}"]
+    if s.get("final_loss") is not None:
+        parts.append(f"final_loss={s['final_loss']:.4f}")
+    if s.get("mean_residual") is not None:
+        parts.append(f"mean_residual={s['mean_residual']:.4f}")
+    rej = s.get("total_rejected")
+    parts.append(f"rejected={0.0 if rej is None else rej:.0f}")
+    parts.append(f"retries={s.get('recoveries', 0)}")
+    return "telemetry: " + "  ".join(parts)

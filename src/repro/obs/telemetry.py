@@ -1,0 +1,148 @@
+"""In-graph round telemetry probes (DESIGN.md §11).
+
+A ``Telemetry`` config is STATIC state, threaded into a round function via
+``functools.partial`` exactly like ``plan=`` and ``sentinel=`` -- it is not
+a pytree and never traced.  When bound, the round computes the selected
+probe scalars next to the loss and returns them in its metrics dict; the
+scanned drivers stack them into the per-chunk history like any other metric
+key, and the streamed shard writer (``obs.shards``) turns them into JSONL
+rows.
+
+**Why statically gated.**  PR 6 established that ANY extra scan output --
+even a duplicated loss -- shifts XLA's fusion choices, which perturbs f32
+reduction orders and therefore trajectories at the ulp level.  Telemetry is
+therefore off by default (``telemetry=None`` leaves every round program
+bit-identical to today's pinned trajectories) and, when on, defines its own
+program family: enabled-path tests pin WITHIN that family (chunk-split
+invariance, scan == host loop under the same probes), never across the
+on/off boundary.
+
+The probe set (all f32 scalars per round):
+
+* ``delta_norm``   -- l2 norm of the cohort-mean client delta Δ̄,
+* ``update_norm``  -- l2 norm of the applied server update desk(sk(Δ̄)),
+* ``residual``     -- relative desketch residual ‖Δ̄ − desk(sk(Δ̄))‖ / ‖Δ̄‖,
+  the paper's sketch-noise observable (concentrates near sqrt(d/b) for the
+  unbiased families; exactly 0 for the uncompressed FedOPT reference),
+* ``m_norm`` / ``v_norm`` / ``vhat_norm`` -- server moment norms AFTER the
+  round's ADA_OPT step (sketch-noise accumulation in the preconditioner),
+* ``ef_norm``      -- error-feedback memory norm for baselines that carry
+  one (topk_ef / cocktail / cdadam / onebit_adam ``err``, fetchsgd
+  ``sk_err``),
+* ``cohort``       -- effective cohort size: clients with weight > 0 in the
+  round's aggregation mask AFTER faults/sentinels (``fed.robust``),
+* ``clip_frac``    -- fraction of the cohort whose pre-clip delta norm
+  exceeded tau (SACFL rounds only; ``core.clipped`` supplies it).
+
+The counter keys PR 6 already emits (``n_dropped`` / ``n_rejected`` /
+``diverged``) ride the same metrics dict and need no probe config.
+
+Under the mesh driver (``launch.train``) the Δ̄-based probes are computed
+OUTSIDE the sketch shard_map from the sharded global delta tree, so GSPMD
+inserts the O(d) reduction collectives they need -- an explicitly opt-in
+cost the compressed uplink itself never pays.  Under the staleness buffer
+the "update" is the multi-generation merge, so ``residual`` there measures
+desketch + staleness deviation, not the pure sketch round trip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# every probe key a telemetry-enabled history/shard row may carry; the
+# single source of truth ``launch.driver.HISTORY_KEYS`` builds on this
+PROBE_KEYS = ("delta_norm", "update_norm", "residual", "m_norm", "v_norm",
+              "vhat_norm", "ef_norm", "cohort", "clip_frac")
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """Per-probe static switches.  ``Telemetry()`` enables the full set; a
+    probe only appears in the metrics when BOTH its switch is on and the
+    round can supply it (e.g. ``clip_frac`` only from SACFL rounds,
+    ``ef_norm`` only from baselines with an EF memory)."""
+    delta_norm: bool = True
+    update_norm: bool = True
+    residual: bool = True
+    moments: bool = True
+    cohort: bool = True
+    clip: bool = True
+
+
+def tree_norm(tree: Pytree) -> jax.Array:
+    """Global l2 norm of a pytree (f32 accumulation)."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def effective_cohort(part_mask, num_clients: int) -> jax.Array:
+    """Clients with aggregation weight > 0 (post faults/sentinels)."""
+    from repro.core.safl import mask_weights
+    if part_mask is None:
+        return jnp.float32(num_clients)
+    w = mask_weights(part_mask)
+    return jnp.sum((w > 0).astype(jnp.float32))
+
+
+def state_norms(state) -> dict:
+    """Moment/EF-memory norms from a server state dict.
+
+    Reads the known layout keys where present: ``m``/``v``/``vhat`` from
+    the ADA_OPT state (possibly nested under ``"opt"``, the baseline and
+    mesh-buffer layout), ``err``/``sk_err`` EF memories from the baseline
+    state."""
+    if not isinstance(state, dict):
+        return {}
+    opt = state.get("opt", state)
+    out = {}
+    if isinstance(opt, dict):
+        for key, name in (("m", "m_norm"), ("v", "v_norm"),
+                          ("vhat", "vhat_norm")):
+            if key in opt:
+                out[name] = tree_norm(opt[key])
+    ef = state.get("err", state.get("sk_err"))
+    if ef is not None:
+        out["ef_norm"] = tree_norm(ef)
+    return out
+
+
+def telemetry_probes(tel: Telemetry, *, deltas: Pytree = None,
+                     update: Pytree = None, part_mask=None, state=None,
+                     clip_frac=None) -> dict:
+    """The selected probe scalars for one round.
+
+    ``deltas`` leaves are (G, ...) per-client deltas, ``update`` is the
+    applied server update tree, ``part_mask`` the round's EFFECTIVE
+    aggregation mask (post guard_uplink), ``state`` the post-update server
+    state.  Callers pass what their round has; absent inputs simply drop
+    their probes.  Everything returned is an f32 scalar, so the scan
+    history stacks each key to a (rounds,) array."""
+    from repro.core.safl import masked_mean_tree
+    out = {}
+    dbar = dn = None
+    if deltas is not None and (tel.delta_norm or tel.residual):
+        dbar = masked_mean_tree(deltas, part_mask)
+        dn = tree_norm(dbar)
+        if tel.delta_norm:
+            out["delta_norm"] = dn
+    if tel.update_norm and update is not None:
+        out["update_norm"] = tree_norm(update)
+    if tel.residual and dbar is not None and update is not None:
+        diff = jax.tree.map(lambda a, b: a - b.astype(jnp.float32),
+                            dbar, update)
+        out["residual"] = tree_norm(diff) / jnp.maximum(dn, 1e-12)
+    if tel.moments and state is not None:
+        out.update(state_norms(state))
+    if tel.cohort and deltas is not None:
+        num = jax.tree.leaves(deltas)[0].shape[0]
+        out["cohort"] = effective_cohort(part_mask, num)
+    if tel.clip and clip_frac is not None:
+        out["clip_frac"] = clip_frac
+    return {k: jnp.asarray(v, jnp.float32) for k, v in out.items()}

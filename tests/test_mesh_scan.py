@@ -594,6 +594,49 @@ def test_mesh_fault_hook_guards():
 
 
 # ---------------------------------------------------------------------------
+# observability (DESIGN §11): probes + streamed shards on the mesh driver
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_mesh_telemetry_probes_and_stream(tmp_path):
+    """Telemetry on the mesh scan: the Δ̄-based probes (computed OUTSIDE
+    the sketch shard_map) land in the history with the full-cohort count,
+    and attaching a stream= writer is pure host-side I/O -- params bitwise
+    unchanged, shard rows equal to the in-memory history value-for-value."""
+    import glob
+    import json
+
+    from repro.obs import ShardWriter, Telemetry
+
+    mesh, cfg, smp = _mk("cross_device")
+    with use_mesh(mesh):
+        pA, oA, hA = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=4, key=jax.random.key(3),
+                                   chunk_size=2, telemetry=Telemetry())
+        stream = ShardWriter(str(tmp_path / "obs"))
+        pB, oB, hB = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=4, key=jax.random.key(3),
+                                   chunk_size=2, telemetry=Telemetry(),
+                                   stream=stream)
+    _assert_trees_equal(pA, pB)
+    _assert_trees_equal(oA, oB)
+    assert hB == {}                   # streamed: the shards are the record
+    G = num_clients_of(mesh, "cross_device")
+    np.testing.assert_array_equal(hA["cohort"], np.full(4, float(G)))
+    assert np.isfinite(hA["residual"]).all() and (hA["residual"] >= 0).all()
+    assert (hA["delta_norm"] > 0).all() and (hA["m_norm"] > 0).all()
+    rows = []
+    for path in sorted(glob.glob(str(tmp_path / "obs" / "metrics-*.jsonl"))):
+        with open(path) as f:
+            rows += [json.loads(ln) for ln in f]
+    assert [r["t"] for r in rows] == list(range(4))
+    for i, row in enumerate(rows):
+        assert set(row) - {"kind", "t"} == set(hA)
+        for k in hA:
+            assert row[k] == float(hA[k][i])
+
+
+# ---------------------------------------------------------------------------
 # single-device fallback: re-run this module on 8 forced CPU devices
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,321 @@
+"""In-graph telemetry, streamed metric shards, manifests (DESIGN.md §11).
+
+Pins the ISSUE 8 contracts on the single-host scan driver:
+
+  * telemetry OFF is the status quo: a ``telemetry=None`` round emits no
+    probe keys, and attaching a ``stream=`` writer is pure host-side I/O --
+    params/state/history stay bitwise identical to the unstreamed run;
+  * telemetry ON defines its own program family, pinned WITHIN the family:
+    streamed shard rows equal the in-memory history value-for-value, and a
+    chunk-split run's concatenated rows equal the single-dispatch run's
+    (shard boundaries are an I/O artifact, not a numeric one);
+  * probe sanity across sketch families: the desketch residual is a
+    relative quantity in [0, ~1], the effective cohort counts the
+    aggregation mask, the uncompressed FedOPT reference reads residual 0,
+    and SACFL's clip_frac hits its {0, 1} extremes under extreme taus;
+  * the rollback supervisor's recovery events land in the same event log
+    with the documented schema, and ``tools/check_telemetry.py`` accepts
+    a real run directory (duplicate rounds across shards included) while
+    rejecting schema violations.
+"""
+
+import functools
+import glob
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaConfig
+from repro.core.clipped import ClippedSAFLConfig, clipped_safl_round
+from repro.core.packed import make_packing_plan
+from repro.core.safl import SAFLConfig, fedopt_round, init_safl, safl_round
+from repro.core.sketch import SketchConfig
+from repro.launch.driver import HISTORY_KEYS, run_scan
+from repro.launch.supervisor import SupervisorConfig, run_supervised
+from repro.obs import (PROBE_KEYS, ShardWriter, Telemetry, format_summary,
+                       span_stats, write_manifest)
+from test_faults import _TransientFaults, _row
+from test_fed import (G, _LinearSampler, _linear_loss, _params0, _safl_setup,
+                      _SK)
+from repro.fed import NAN
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import check_telemetry  # noqa: E402  (tools/ is not a package)
+
+TEL = Telemetry()
+
+
+def _run(round_fn, fresh, *, rounds=4, chunk_size=0, **kw):
+    p0, s0 = fresh()
+    return run_scan(round_fn, _LinearSampler(), p0, s0, rounds=rounds,
+                    key=jax.random.key(0), chunk_size=chunk_size, **kw)
+
+
+def _eq(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _rows(run_dir):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(run_dir, "metrics-*.jsonl"))):
+        with open(path) as f:
+            rows += [json.loads(ln) for ln in f if ln.strip()]
+    return rows
+
+
+def _events(run_dir, kind=None):
+    path = os.path.join(run_dir, "events.jsonl")
+    with open(path) as f:
+        evs = [json.loads(ln) for ln in f if ln.strip()]
+    return [e for e in evs if kind is None or e["kind"] == kind]
+
+
+# ---------------------------------------------------------------------------
+# disabled path: no probe keys, and streaming is host-side I/O only
+# ---------------------------------------------------------------------------
+
+def test_telemetry_off_emits_no_probe_keys():
+    _, _, round_fn, fresh = _safl_setup()
+    _, _, h = _run(round_fn, fresh)
+    assert set(h) == {"loss"}
+    assert not set(h) & set(PROBE_KEYS)
+
+
+def test_stream_is_host_side_io_only(tmp_path):
+    """stream= with telemetry off: the compiled program is untouched, so
+    params/state are bitwise the unstreamed run's and the shard rows carry
+    exactly the unstreamed history's values."""
+    _, _, round_fn, fresh = _safl_setup()
+    pA, sA, hA = _run(round_fn, fresh, chunk_size=2, bits_per_round=64)
+    stream = ShardWriter(str(tmp_path / "run"))
+    pB, sB, hB = _run(round_fn, fresh, chunk_size=2, bits_per_round=64,
+                      stream=stream)
+    _eq((pA, sA), (pB, sB))
+    assert hB == {}                       # shards are the record
+    rows = _rows(str(tmp_path / "run"))
+    assert [r["t"] for r in rows] == list(range(4))
+    np.testing.assert_array_equal([r["loss"] for r in rows], hA["loss"])
+    np.testing.assert_array_equal([r["uplink_bits"] for r in rows],
+                                  hA["uplink_bits"])
+
+
+# ---------------------------------------------------------------------------
+# enabled path: pinned within the telemetry program family
+# ---------------------------------------------------------------------------
+
+def test_streamed_rows_match_in_memory_history(tmp_path):
+    """Same program (telemetry on both sides): streamed JSONL rows ==
+    in-memory stacked history, key for key, round for round."""
+    _, _, round_fn, fresh = _safl_setup()
+    rf = functools.partial(round_fn, telemetry=TEL)
+    pA, _, hA = _run(rf, fresh, chunk_size=2)
+    stream = ShardWriter(str(tmp_path / "run"))
+    pB, _, hB = _run(rf, fresh, chunk_size=2, stream=stream)
+    _eq(pA, pB)
+    assert hB == {}
+    rows = _rows(str(tmp_path / "run"))
+    assert len(rows) == 4
+    for i, row in enumerate(rows):
+        assert row["kind"] == "metrics" and row["t"] == i
+        assert set(row) - {"kind", "t"} == set(hA)
+        for k in hA:
+            assert row[k] == float(hA[k][i])
+
+
+def test_chunk_split_shard_invariance(tmp_path):
+    """Shard boundaries are an I/O artifact: a chunk_size=2 run's
+    concatenated rows equal the single-dispatch run's, bit for bit."""
+    _, _, round_fn, fresh = _safl_setup()
+    rf = functools.partial(round_fn, telemetry=TEL)
+    s1 = ShardWriter(str(tmp_path / "one"))
+    p1, _, _ = _run(rf, fresh, stream=s1)                  # one dispatch
+    s2 = ShardWriter(str(tmp_path / "split"))
+    p2, _, _ = _run(rf, fresh, chunk_size=2, stream=s2)
+    _eq(p1, p2)
+    assert s1._shard == 1 and s2._shard == 2
+    assert _rows(str(tmp_path / "one")) == _rows(str(tmp_path / "split"))
+    # spans: first dispatch of each chunk length is flagged compile=True
+    spans = _events(str(tmp_path / "split"), "span")
+    assert [s["compile"] for s in spans] == [True, False]
+    assert [(s["t0"], s["t1"]) for s in spans] == [(0, 2), (2, 4)]
+
+
+# ---------------------------------------------------------------------------
+# probe sanity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["countsketch", "srht", "gaussian"])
+def test_probe_sanity_across_sketch_families(kind):
+    """Residual is a RELATIVE desketch error (O(1), not norm-scaled); the
+    cohort probe counts the full unmasked cohort; moment norms track the
+    amsgrad server state; everything is finite and (rounds,)-shaped."""
+    sk = SketchConfig(kind=kind, ratio=0.25, min_b=8)
+    cfg = SAFLConfig(sketch=sk, server=AdaConfig(name="amsgrad", lr=0.05),
+                     client_lr=0.05, local_steps=2)
+    plan = make_packing_plan(sk, _params0())
+    rf = functools.partial(safl_round, cfg, _linear_loss, plan=plan,
+                           telemetry=TEL)
+    fresh = lambda: (_params0(), init_safl(cfg, _params0()))
+    _, _, h = _run(rf, fresh)
+    expect = {"loss", "delta_norm", "update_norm", "residual", "m_norm",
+              "v_norm", "vhat_norm", "cohort"}
+    assert set(h) == expect
+    assert set(h) <= set(HISTORY_KEYS)
+    for k in expect:
+        assert h[k].shape == (4,) and np.isfinite(h[k]).all(), k
+    assert (h["delta_norm"] > 0).all()
+    # unbiased desketch: relative error concentrates around sqrt(d/b) = 2
+    # at ratio 0.25 -- O(1) in the RELATIVE sense, never norm-scaled
+    assert (h["residual"] >= 0).all() and (h["residual"] < 4.0).all()
+    np.testing.assert_array_equal(h["cohort"], np.full(4, float(G)))
+    assert (h["m_norm"] > 0).all() and (h["vhat_norm"] > 0).all()
+
+
+def test_fedopt_reference_residual_is_zero():
+    """The uncompressed reference applies Δ̄ itself: desk(sk(Δ̄)) == Δ̄ and
+    the residual probe reads exactly 0 -- the sketch-noise baseline."""
+    cfg = SAFLConfig(sketch=_SK, server=AdaConfig(name="amsgrad", lr=0.05),
+                     client_lr=0.05, local_steps=2)
+    rf = functools.partial(fedopt_round, cfg, _linear_loss, telemetry=TEL)
+    fresh = lambda: (_params0(), init_safl(cfg, _params0()))
+    _, _, h = _run(rf, fresh)
+    np.testing.assert_array_equal(h["residual"], np.zeros(4))
+    np.testing.assert_array_equal(h["update_norm"], h["delta_norm"])
+
+
+@pytest.mark.parametrize("tau,frac", [(1e-6, 1.0), (1e6, 0.0)])
+def test_clip_frac_extremes(tau, frac):
+    """SACFL's clip_frac probe: a vanishing tau clips every client, a huge
+    tau clips none."""
+    base = SAFLConfig(sketch=_SK, server=AdaConfig(name="amsgrad", lr=0.05),
+                      client_lr=0.05, local_steps=2)
+    cfg = ClippedSAFLConfig(base=base, clip_tau=tau)
+    plan = make_packing_plan(_SK, _params0())
+    rf = functools.partial(clipped_safl_round, cfg, _linear_loss, plan=plan,
+                           telemetry=TEL)
+    fresh = lambda: (_params0(), init_safl(base, _params0()))
+    _, _, h = _run(rf, fresh)
+    np.testing.assert_array_equal(h["clip_frac"], np.full(4, frac))
+
+
+# ---------------------------------------------------------------------------
+# supervisor recovery events + the schema validator
+# ---------------------------------------------------------------------------
+
+def test_supervisor_recovery_events_in_stream(tmp_path):
+    """A supervised run with a transient fault streams its rollback as a
+    structured recovery event next to the spans, re-emits the retried span
+    in new shards (duplicate t, last-wins), and the whole directory passes
+    tools/check_telemetry.py."""
+    run_dir = str(tmp_path / "sup")
+    _, _, round_fn, fresh = _safl_setup()
+    key = jax.random.key(0)
+    faults = _TransientFaults(key, _row(NAN))   # fires on rounds [4, 6)
+    stream = ShardWriter(run_dir)
+    write_manifest(run_dir, run="test", sketch=_SK, guard_pins=None)
+    sampler = _LinearSampler()
+
+    def launch(p, s, *, key, start_round, on_chunk):
+        return run_scan(round_fn, sampler, p, s, rounds=8, key=key,
+                        chunk_size=2, start_round=start_round,
+                        on_chunk=on_chunk, faults=faults, stream=stream)
+
+    p0, s0 = fresh()
+    p, s, hist, log = run_supervised(
+        launch, p0, s0, rounds=8, key=key,
+        config=SupervisorConfig(max_retries=3), stream=stream)
+    assert hist == {}                     # shards are the record
+    assert len(log) == 1
+
+    recs = _events(run_dir, "recovery")
+    assert len(recs) == 1
+    for field in check_telemetry.RECOVERY_FIELDS + ("rekey",):
+        assert field in recs[0], field
+    assert recs[0]["retry"] == 1
+    assert recs[0]["t_resume"] == 4
+    assert recs[0]["depth"] == recs[0]["t_fault"] - recs[0]["t_resume"] >= 0
+
+    # the faulted chunk's shard was already written (NaN rows), then the
+    # retried span re-emitted rounds 4..8 -> duplicate t across shards,
+    # 8 distinct rounds, and the validator accepts all of it
+    rows = _rows(run_dir)
+    ts = [r["t"] for r in rows]
+    assert len(ts) > 8 and sorted(set(ts)) == list(range(8))
+    assert check_telemetry.check(run_dir, rounds=8) == []
+    assert stream.summary()["recoveries"] == 1
+
+
+def test_check_telemetry_rejects_violations(tmp_path):
+    bad = str(tmp_path / "bad")
+    os.makedirs(bad)
+    with open(os.path.join(bad, "metrics-00000.jsonl"), "w") as f:
+        f.write(json.dumps({"kind": "metrics", "t": 0, "loss": 1.0}) + "\n")
+        f.write(json.dumps({"kind": "metrics", "t": 2, "loss": 1.0,
+                            "bogus_key": 3.0}) + "\n")
+    with open(os.path.join(bad, "events.jsonl"), "w") as f:
+        f.write(json.dumps({"kind": "span", "t0": 0}) + "\n")
+        f.write(json.dumps({"kind": "mystery"}) + "\n")
+    errs = check_telemetry.check(bad, rounds=4)
+    text = "\n".join(errs)
+    assert "manifest.json missing" in text
+    assert "not consecutive" in text
+    assert "bogus_key" in text
+    assert "missing 't1'" in text
+    assert "unknown kind" in text
+    assert "distinct metric rounds 2 != expected 4" in text
+
+
+def test_check_telemetry_accepts_clean_run(tmp_path):
+    run_dir = str(tmp_path / "ok")
+    _, _, round_fn, fresh = _safl_setup()
+    rf = functools.partial(round_fn, telemetry=TEL)
+    stream = ShardWriter(run_dir)
+    write_manifest(run_dir, run="test", guard_pins=None)
+    _run(rf, fresh, chunk_size=2, stream=stream)
+    assert check_telemetry.check(run_dir, rounds=4) == []
+    assert check_telemetry.main([run_dir, "--rounds", "4"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# writer aggregates, manifest, span stats
+# ---------------------------------------------------------------------------
+
+def test_shard_writer_aggregates_and_summary(tmp_path):
+    w = ShardWriter(str(tmp_path / "w"))
+    w.write_chunk(0, {"loss": np.asarray([4.0, 2.0]),
+                      "residual": np.asarray([0.5, 0.3])})
+    w.write_chunk(2, {"loss": np.asarray([1.0]),
+                      "residual": np.asarray([0.1])})
+    s = w.summary()
+    assert s["rounds"] == 3 and s["shards"] == 2
+    assert s["final_loss"] == 1.0
+    np.testing.assert_allclose(s["mean_residual"], 0.3)
+    assert s["recoveries"] == 0 and s["total_rejected"] is None
+    line = format_summary(s)
+    assert "rounds=3" in line and "final_loss=1.0000" in line
+
+
+def test_manifest_schema(tmp_path):
+    path = write_manifest(str(tmp_path / "m"), run="unit",
+                          sketch=_SK, config={"rounds": 4},
+                          topology="single-host", guard_pins=None)
+    with open(path) as f:
+        man = json.load(f)
+    from repro.obs import REQUIRED_KEYS
+    for k in REQUIRED_KEYS:
+        assert k in man, k
+    assert man["sketch"]["kind"] == "countsketch"
+    assert man["config"]["rounds"] == 4
+    assert man["topology"] == "single-host"
+
+
+def test_span_stats():
+    assert span_stats([]) == {}
+    st = span_stats([1e-3, 2e-3, 3e-3])
+    assert st["p50_us"] == pytest.approx(2000.0)
+    assert st["p50_us"] <= st["p95_us"]

@@ -1,0 +1,150 @@
+"""Schema validator for a telemetry run directory (DESIGN.md §11).
+
+    python tools/check_telemetry.py RUN_DIR [--rounds N]
+
+Checks, exiting non-zero on the first class of failure:
+
+* ``manifest.json`` exists, parses, and carries every
+  ``repro.obs.manifest.REQUIRED_KEYS`` key;
+* every ``metrics-*.jsonl`` line parses, has ``kind == "metrics"`` and an
+  integer ``t``, and every other key is drawn from the single source of
+  truth ``repro.launch.driver.HISTORY_KEYS`` with a finite-or-nan float
+  value;
+* ``t`` is strictly monotonic WITHIN each shard (across shards it may
+  restart: the rollback supervisor re-emits retried spans in new shards,
+  and readers resolve duplicate ``t`` last-wins);
+* every ``events.jsonl`` line parses with ``kind`` in {span, recovery} and
+  that kind's required fields (span: t0/t1/seconds/compile; recovery:
+  retry/t_fault/t_resume/depth/reason);
+* with ``--rounds N``: the number of DISTINCT metric rounds equals N.
+
+CI runs this against the mini-dryrun's ``--telemetry`` artifact so a
+schema regression (a renamed key, a non-JSON line, a shard with
+non-monotonic rounds) fails the build rather than silently producing
+unreadable artifacts.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SPAN_FIELDS = ("t0", "t1", "seconds", "compile")
+RECOVERY_FIELDS = ("retry", "t_fault", "t_resume", "depth", "reason")
+
+
+def check(run_dir: str, rounds: int | None = None) -> list[str]:
+    """Returns a list of schema violations (empty = valid)."""
+    from repro.launch.driver import HISTORY_KEYS
+    from repro.obs.manifest import REQUIRED_KEYS
+
+    errs: list[str] = []
+
+    mpath = os.path.join(run_dir, "manifest.json")
+    if not os.path.exists(mpath):
+        errs.append("manifest.json missing")
+    else:
+        try:
+            with open(mpath) as f:
+                man = json.load(f)
+            for k in REQUIRED_KEYS:
+                if k not in man:
+                    errs.append(f"manifest.json: required key {k!r} missing")
+        except json.JSONDecodeError as e:
+            errs.append(f"manifest.json: does not parse ({e})")
+
+    allowed = {"kind", "t"} | set(HISTORY_KEYS)
+    shards = sorted(glob.glob(os.path.join(run_dir, "metrics-*.jsonl")))
+    if not shards:
+        errs.append("no metrics-*.jsonl shards")
+    seen_t: set[int] = set()
+    for path in shards:
+        name = os.path.basename(path)
+        prev_t = None
+        with open(path) as f:
+            for i, line in enumerate(f):
+                if not line.strip():
+                    continue
+                try:
+                    row = json.loads(line)
+                except json.JSONDecodeError as e:
+                    errs.append(f"{name}:{i + 1}: does not parse ({e})")
+                    continue
+                if row.get("kind") != "metrics":
+                    errs.append(f"{name}:{i + 1}: kind != 'metrics'")
+                t = row.get("t")
+                if not isinstance(t, int):
+                    errs.append(f"{name}:{i + 1}: non-integer t {t!r}")
+                    continue
+                if prev_t is not None and t != prev_t + 1:
+                    # within one shard rounds are consecutive; only ACROSS
+                    # shards may t restart (supervisor rollback re-emission)
+                    errs.append(f"{name}:{i + 1}: t {t} after {prev_t} "
+                                "(not consecutive within shard)")
+                prev_t = t
+                seen_t.add(t)
+                for k, v in row.items():
+                    if k == "kind" or k == "t":
+                        continue
+                    if k not in allowed:
+                        errs.append(f"{name}:{i + 1}: unknown key {k!r} "
+                                    "(not in driver.HISTORY_KEYS)")
+                    elif not isinstance(v, (int, float)):
+                        errs.append(f"{name}:{i + 1}: {k} is {type(v).__name__},"
+                                    " expected number")
+
+    epath = os.path.join(run_dir, "events.jsonl")
+    if os.path.exists(epath):
+        with open(epath) as f:
+            for i, line in enumerate(f):
+                if not line.strip():
+                    continue
+                try:
+                    ev = json.loads(line)
+                except json.JSONDecodeError as e:
+                    errs.append(f"events.jsonl:{i + 1}: does not parse ({e})")
+                    continue
+                kind = ev.get("kind")
+                if kind == "span":
+                    need = SPAN_FIELDS
+                elif kind == "recovery":
+                    need = RECOVERY_FIELDS
+                else:
+                    errs.append(f"events.jsonl:{i + 1}: unknown kind {kind!r}")
+                    continue
+                for k in need:
+                    if k not in ev:
+                        errs.append(f"events.jsonl:{i + 1}: {kind} event "
+                                    f"missing {k!r}")
+
+    if rounds is not None and len(seen_t) != rounds:
+        errs.append(f"distinct metric rounds {len(seen_t)} != expected "
+                    f"{rounds}")
+    return errs
+
+
+def main(argv: list[str]) -> int:
+    rounds = None
+    if "--rounds" in argv:
+        i = argv.index("--rounds")
+        rounds = int(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    if len(argv) != 1:
+        print(__doc__)
+        return 2
+    errs = check(argv[0], rounds)
+    if errs:
+        print(f"# telemetry schema check FAILED ({len(errs)} violation(s))")
+        for e in errs[:50]:
+            print("#   " + e)
+        return 1
+    print(f"# telemetry schema ok: {argv[0]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
