@@ -43,10 +43,12 @@ from repro.core.clipped import ClippedSAFLConfig, clipped_safl_round
 from repro.core.intrinsic_dim import intrinsic_dimension
 from repro.core.packed import (derive_round_params, desk_packed,
                                make_packing_plan, sk_packed)
-from repro.core.safl import SAFLConfig, init_safl, safl_round
+from repro.core.safl import (SAFLConfig, init_safl, safl_round,
+                             uplink_bits_per_round)
 from repro.core.sketch import (SketchConfig, desketch_tree, sk_leaf,
                                sketch_tree, total_sketch_bits)
-from repro.data import BigramLMData, LMDataConfig
+from repro.data import (BigramLMData, ClsDataConfig, GaussianClsData,
+                        LMDataConfig)
 from repro.fed import (AsyncConfig, FaultConfig, SentinelConfig,
                        UniformParticipation, init_async_state,
                        make_async_round)
@@ -573,6 +575,80 @@ def mesh_rows():
               f"steady_state", final_loss=final_f, stats=st_f)
 
 
+def stream_rows():
+    """Streamed client-microbatch aggregation at simulated-population scale
+    (DESIGN §12, ISSUE 9): a 330-parameter linear classifier on the
+    device-side Gaussian-mixture sampler, aggregated with
+    ``microbatch=1024`` so the round never materializes the (G, b_total)
+    payload or the (G, d) delta stack -- peak aggregation memory is
+    O(microbatch x b_total) at every G.
+
+    Rows:
+      stream/safl_G100000_scan : guarded steady-state row (the ``_scan``
+        suffix puts it under the 2x time budget and the exact
+        ``.final_loss`` pin) -- 100k simulated clients per round on CPU.
+      stream/scaling_G{n}      : the scaling curve (1k/10k/100k, plus 1M
+        when not --quick).  Informational: round time scales ~linearly in
+        G while memory stays flat, so these rows move with G by design and
+        stay OUT of the guard (no _scan/_async/_faults suffix).
+    """
+    F, C = 32, 10
+    sk = SketchConfig(kind="countsketch", ratio=0.25, min_b=64)
+    cfg = SAFLConfig(sketch=sk, server=AdaConfig(name="amsgrad", lr=0.05),
+                     client_lr=0.1, local_steps=1)
+    params0 = {"W": jnp.zeros((F, C)), "b": jnp.zeros((C,))}
+    plan = make_packing_plan(sk, params0)
+    bits_client = uplink_bits_per_round(cfg, params0)
+    MB = 1024
+
+    def cls_loss(p, b):
+        logits = b["x"] @ p["W"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(
+            logp, b["y"][..., None], axis=-1))
+
+    round_fn = functools.partial(safl_round, cfg, cls_loss, plan=plan)
+
+    def timed_rounds(G, rounds):
+        data = GaussianClsData(ClsDataConfig(
+            num_features=F, num_classes=C, num_clients=G,
+            dirichlet_alpha=0.0, seed=0))
+        sampler = data.device_sampler(2, 1)
+        chunk = make_chunk_fn(round_fn, sampler, rounds, microbatch=MB)
+        key = jax.random.key(1000)
+
+        def run():
+            p = jax.tree.map(jnp.zeros_like, params0)
+            s = init_safl(cfg, p)
+            t0 = time.perf_counter()
+            _, _, _, hist = chunk(p, s, sampler.init_state(), key,
+                                  jnp.asarray(0, jnp.int32))
+            losses = np.asarray(hist["loss"])
+            return losses, time.perf_counter() - t0
+        run()                                      # compile
+        losses, s1 = run()
+        _, s2 = run()
+        return losses, min(s1, s2) / rounds * 1e6
+
+    # guarded row: 100k clients per round, fixed 2-round horizon so the
+    # final-loss pin is identical in quick and full runs
+    G0 = 100_000
+    losses, us = timed_rounds(G0, 2)
+    _emit("stream/safl_G100000_scan", us,
+          f"final_loss={losses[-1]:.4f};microbatch={MB};"
+          f"uplink_bits={bits_client * G0};"
+          f"payload_rows_resident={MB}_of_{G0}",
+          final_loss=float(losses[-1]))
+
+    # scaling curve: round time vs simulated population, memory flat
+    sizes = [1_000, 10_000, 100_000] + ([] if QUICK else [1_000_000])
+    for G in sizes:
+        losses, us = timed_rounds(G, 2)
+        _emit(f"stream/scaling_G{G}", us,
+              f"final_loss={losses[-1]:.4f};uplink_bits={bits_client * G};"
+              f"bits_per_client={bits_client};microbatch={MB}")
+
+
 def _guarded_row(name: str) -> bool:
     """Steady-state scanned rows only: fig1/*_scan and mesh/*_scan plus the
     participation (_p{frac}), async-buffer (_async) and fault-injection
@@ -646,6 +722,7 @@ def main() -> None:
         fig2_finetune()
         fig5_hessian_spectrum()
         sketch_ops()
+        stream_rows()
     if JSON_OUT:
         # the two modes own disjoint row namespaces and each preserves the
         # other's committed baseline: --mesh merges its mesh/* rows in, the

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from repro.core.adaptive import apply_update
 from repro.core.packed import (derive_round_params, desk_packed,
                                make_packing_plan, sk_packed_clients)
-from repro.core.safl import SAFLConfig, client_delta, masked_mean
+from repro.core.safl import (SAFLConfig, client_delta, masked_mean,
+                             resolve_microbatch, streamed_sketch_round)
 
 Pytree = Any
 LossFn = Callable[[Pytree, Any], jax.Array]
@@ -65,8 +66,8 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
                        params: Pytree, opt_state: dict, batch: Pytree,
                        round_key: jax.Array, *,
                        plan=None, part_mask=None, fault_spec=None,
-                       sentinel=None,
-                       telemetry=None) -> tuple[Pytree, dict, dict]:
+                       sentinel=None, telemetry=None,
+                       microbatch=None) -> tuple[Pytree, dict, dict]:
     """One SAFL round with per-client delta clipping (heavy-tail defense).
 
     batch leaves: (G, K, mb, ...) as in safl_round; ``plan``/``part_mask``/
@@ -76,9 +77,25 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
     client clipping bounds honest heavy tails, the sentinel handles
     adversarially broken payloads, so SACFL composes both defenses).  With
     telemetry on, this round additionally supplies the ``clip_frac`` probe:
-    the cohort fraction whose pre-clip delta norm exceeded tau."""
+    the cohort fraction whose pre-clip delta norm exceeded tau.
+    ``microbatch`` streams the aggregation over client chunks exactly as in
+    ``safl_round`` (clipping is per-client and so commutes with the fold);
+    None / >= G keeps the materialized path below untouched."""
     base = cfg.base
     eta = jnp.asarray(base.client_lr, jnp.float32)
+
+    if microbatch is not None:
+        mb = resolve_microbatch(microbatch,
+                                jax.tree.leaves(batch)[0].shape[0])
+        if mb is not None:
+            def clipped_client(b):
+                delta, l = client_delta(base, loss_fn, params, b, eta)
+                return clip_delta(cfg, delta), l
+            return streamed_sketch_round(
+                base, clipped_client, params, opt_state, batch, round_key,
+                mb, plan=plan, part_mask=part_mask, fault_spec=fault_spec,
+                sentinel=sentinel, telemetry=telemetry)
+
     probe_clip = telemetry is not None and telemetry.clip
 
     # the trigger output only exists when its probe is on -- with telemetry

@@ -434,6 +434,23 @@ def sk_packed_clients(plan: PackingPlan, rp: dict, stacked: Pytree) -> jax.Array
     return jax.vmap(lambda f: sk_flat(plan, rp, f))(flat2)
 
 
+def sk_packed_clients_wsum(plan: PackingPlan, rp: dict, stacked: Pytree,
+                           w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused sketch of a client chunk, reduced to its weighted payload sum.
+
+    The streaming unit of work of the microbatch fold (DESIGN.md §12):
+    sketch the ``mb`` stacked client trees (leaves ``(mb, ...)``) with the
+    shared round operator and immediately reduce them to the ``(b_total,)``
+    weighted payload sum plus the scalar weight sum, so no ``(G, b_total)``
+    payload ever materializes outside one chunk.  Linearity (Property 1)
+    makes the chunk-summed sketch exactly the sketch of the weighted delta
+    sum, so folding these partial sums over chunks -- and then psumming
+    across mesh client shards -- reproduces the cohort mean aggregation.
+    """
+    s = sk_packed_clients(plan, rp, stacked).astype(jnp.float32)
+    return jnp.sum(s * w[:, None].astype(s.dtype), axis=0), jnp.sum(w)
+
+
 def roundtrip_packed(plan: PackingPlan, key: jax.Array, tree: Pytree) -> Pytree:
     """desk(sk(tree)) with round params derived exactly once."""
     rp = derive_round_params(plan, key)

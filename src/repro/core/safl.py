@@ -164,12 +164,215 @@ def client_delta(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     return tree_sub(params, p_final), jnp.mean(losses)
 
 
+# ---------------------------------------------------------------------------
+# streamed client-microbatch aggregation (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def resolve_microbatch(microbatch, num_clients: int):
+    """Static routing of the streamed-aggregation knob (DESIGN.md §12).
+
+    ``None`` -- or any chunk size covering the whole cohort -- selects the
+    materialized single-chunk path, UNTOUCHED from the pinned program: a
+    fold with one chunk is semantically the existing round, so the knob
+    routes at Python level and the pinned bitwise trajectories survive by
+    construction.  A chunk size below ``num_clients`` returns the validated
+    int and selects the streamed fold, which is its own program family
+    (pinned within itself, allclose to the materialized path).
+    """
+    if microbatch is None:
+        return None
+    mb = int(microbatch)
+    if mb <= 0:
+        raise ValueError(f"microbatch must be a positive int, got {microbatch}")
+    if mb >= num_clients:
+        return None
+    return mb
+
+
+def chunk_clients(tree: Pytree, mb: int, pad: int) -> Pytree:
+    """Zero-pad the leading client axis by ``pad`` rows and reshape every
+    leaf to ``(n_mb, mb, ...)`` microbatch chunks (scan xs layout).  The pad
+    rows are masked out by the fold (weight 0 AND statically zeroed payload
+    -- see ``streamed_sketch_round``), so any ``mb`` is valid: a non-dividing
+    ``G % mb`` costs one masked tail chunk, never a reordered reduction."""
+    def f(x):
+        if pad:
+            x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+        return x.reshape((-1, mb) + x.shape[1:])
+    return jax.tree.map(f, tree)
+
+
+def _pad_fault_spec(spec: dict, pad: int) -> dict:
+    """Extend a (G,) fault spec with ``pad`` NEUTRAL rows (arrive, honest
+    scale, no corruption): pad clients carry weight 0, and a neutral spec
+    keeps their zeroed payload finite so 0-weight rows contribute exactly
+    +0.0 to the fold."""
+    if not pad:
+        return spec
+    neutral = {"arrive": 1.0, "nan": False, "inf": False, "scale": 1.0}
+    return {k: jnp.pad(v, (0, pad), constant_values=neutral[k])
+            for k, v in spec.items()}
+
+
+def streamed_sketch_round(cfg: SAFLConfig, client_fn, params: Pytree,
+                          opt_state: dict, batch: Pytree,
+                          round_key: jax.Array, mb: int, *,
+                          lr_scale: jax.Array | float = 1.0, plan=None,
+                          part_mask=None, fault_spec=None, sentinel=None,
+                          telemetry=None) -> tuple[Pytree, dict, dict]:
+    """One sketched round as a fold over client microbatches (DESIGN.md §12).
+
+    Instead of materializing the ``(G, d_total)`` delta stack and the
+    ``(G, b_total)`` payload, a ``lax.scan`` processes ``mb`` clients per
+    step -- ``client_fn(batch_slice) -> (delta_tree, loss)`` for ONE client,
+    vmapped over the chunk -- and carries only the running weighted
+    sketch-sum, weight-sum and loss-sum: peak payload memory is
+    ``O(mb * b_total)``, independent of G.  Exactness rests on sketch
+    linearity (Property 1): the sum of per-chunk sketch sums IS the sketch
+    of the weighted delta sum, so the single desketch at the end sees the
+    same cohort mean the materialized path computes (equal up to f32
+    summation order -- the streamed family is pinned within itself, see
+    ``resolve_microbatch``).
+
+    The repro.fed hook contract is preserved per-microbatch against the
+    GLOBAL client index: the (G,) participation weights and the (G,) fault
+    spec are sliced to rows ``[i*mb, (i+1)*mb)`` of chunk i, which is exact
+    because every per-client stream is a pure function of the absolute
+    client index (DESIGN.md §7/§10).  The §10 fusion order (faults ->
+    sentinels -> mask -> one reduction) runs inside each chunk, except the
+    norm-outlier sentinel: its median is a GLOBAL cohort statistic, so
+    ``norm_mult > 0`` runs a two-pass fold (pass 1 streams per-client norm/
+    finite/loss stats, the median + verdicts are computed between passes,
+    pass 2 deterministically recomputes deltas and accumulates the payload
+    sum under the final weights) -- 2x client compute is the price of a
+    global statistic under O(mb) memory.
+
+    Non-dividing ``G % mb`` pads a masked tail chunk: pad rows carry weight
+    0 AND a statically zeroed payload/loss (pad positions are known at
+    trace time), so not even a NaN produced by the synthetic zero batch can
+    leak into the sums.
+    """
+    if telemetry is not None:
+        raise ValueError(
+            "telemetry probes consume the materialized (G, ...) delta "
+            "stack; the streamed microbatch fold never builds it -- run "
+            "telemetry with microbatch=None")
+    if plan is None:
+        plan = make_packing_plan(cfg.sketch, params)
+    rp = derive_round_params(plan, round_key)
+
+    G = jax.tree.leaves(batch)[0].shape[0]
+    n_mb = -(-G // mb)
+    pad = n_mb * mb - G
+
+    w0 = (jnp.ones((G,), jnp.float32) if part_mask is None
+          else mask_weights(part_mask).astype(jnp.float32))
+    xs = {"batch": chunk_clients(batch, mb, pad),
+          "w": jnp.pad(w0, (0, pad)).reshape(n_mb, mb)}
+    if pad:
+        xs["real"] = jnp.pad(jnp.ones((G,), bool),
+                             (0, pad)).reshape(n_mb, mb)
+    if fault_spec is not None:
+        spec_p = _pad_fault_spec(fault_spec, pad)
+        xs["spec"] = {k: v.reshape((n_mb, mb)) for k, v in spec_p.items()}
+
+    def chunk_payload(xc):
+        """One chunk's (mb, b_total) sketches, (mb,) losses and post-arrival
+        weights, §10 order (corruption before any vetting)."""
+        deltas, losses = jax.vmap(client_fn)(xc["batch"])
+        sks = sk_packed_clients(plan, rp, deltas).astype(jnp.float32)
+        if pad:     # static: hard-zero the tail-pad rows
+            sks = jnp.where(xc["real"][:, None], sks, jnp.float32(0.0))
+            losses = jnp.where(xc["real"], losses, jnp.float32(0.0))
+        w = xc["w"]
+        if fault_spec is not None:
+            from repro.fed.faults import corrupt_payload
+            sks = corrupt_payload(xc["spec"], sks)
+            w = w * xc["spec"]["arrive"]
+        return sks, losses, w
+
+    counters = {}
+    if fault_spec is not None:
+        from repro.fed.faults import n_dropped
+        counters["n_dropped"] = n_dropped(fault_spec, part_mask)
+
+    S0 = jnp.zeros((plan.b_total,), jnp.float32)
+    if sentinel is None or sentinel.norm_mult == 0.0:
+        # single pass: the finite-check verdict is row-local, so faults ->
+        # sentinel -> mask fuse inside each chunk
+        def body(carry, xc):
+            S, W, L, n_rej = carry
+            sks, losses, w = chunk_payload(xc)
+            if sentinel is not None:
+                ok = jnp.isfinite(sks).all(axis=-1)
+                sks = jnp.where(ok[:, None], sks, jnp.float32(0.0))
+                n_rej = n_rej + jnp.sum((w > 0) & ~ok)
+                w = w * ok.astype(jnp.float32)
+            return (S + jnp.sum(sks * w[:, None], axis=0), W + jnp.sum(w),
+                    L + jnp.sum(w * losses), n_rej), None
+
+        (S, W, L, n_rej), _ = jax.lax.scan(
+            body, (S0, jnp.float32(0.0), jnp.float32(0.0),
+                   jnp.zeros((), jnp.int32)), xs)
+        if sentinel is not None:
+            counters["n_rejected"] = n_rej
+    else:
+        # two-pass: the norm-outlier median needs the whole cohort's stats
+        def stats(carry, xc):
+            sks, losses, w = chunk_payload(xc)
+            ok = jnp.isfinite(sks).all(axis=-1)
+            clean = jnp.where(ok[:, None], sks, jnp.float32(0.0))
+            return carry, (losses, jnp.sum(jnp.square(clean), axis=-1),
+                           ok, w)
+
+        _, (losses_c, nrm2_c, ok_c, w_c) = jax.lax.scan(stats, 0, xs)
+        losses_p, nrm2_p = losses_c.reshape(-1), nrm2_c.reshape(-1)
+        ok_p, w_arr = ok_c.reshape(-1), w_c.reshape(-1)
+        from repro.fed.robust import masked_median
+        pool = (w_arr > 0) & ok_p
+        med2 = masked_median(nrm2_p, pool)
+        valid = ok_p & (nrm2_p <= sentinel.norm_mult ** 2 * med2)
+        counters["n_rejected"] = jnp.sum((w_arr > 0) & ~valid)
+        w_eff = w_arr * valid.astype(jnp.float32)
+
+        xs2 = {**xs, "ok": ok_c, "we": w_eff.reshape(n_mb, mb)}
+
+        def accum(S, xc):
+            # deltas/sketches are pure in (params, batch, rp): recomputing
+            # them is deterministic, so pass 2 streams the SAME payloads
+            sks, _, _ = chunk_payload(xc)
+            clean = jnp.where(xc["ok"][:, None], sks, jnp.float32(0.0))
+            return S + jnp.sum(clean * xc["we"][:, None], axis=0), None
+
+        S, _ = jax.lax.scan(accum, S0, xs2)
+        W = jnp.sum(w_eff)
+        L = jnp.sum(w_eff * losses_p)
+
+    den = (jnp.asarray(part_mask["den"], jnp.float32)
+           if isinstance(part_mask, dict) else jnp.maximum(W, 1.0))
+    mbar = S / den
+    loss = L / den
+
+    update = desk_packed(plan, rp, mbar)
+    new_params, new_opt = apply_update(cfg.server, opt_state, params, update,
+                                       lr_scale=lr_scale)
+    if sentinel is not None:
+        from repro.fed.robust import carry_if_empty, divergence_flag
+        # the scalar surviving weight W plays the eff-mask role: its sum is
+        # itself, which is all carry_if_empty consumes
+        new_params, new_opt = carry_if_empty(W, (new_params, new_opt),
+                                             (params, opt_state))
+        counters = {**counters, "diverged": divergence_flag(sentinel, loss)}
+    return new_params, new_opt, {"loss": loss, **counters}
+
+
 def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                opt_state: dict, batch: Pytree, round_key: jax.Array,
                eta_scale: jax.Array | float = 1.0,
                lr_scale: jax.Array | float = 1.0, *,
                plan=None, part_mask=None, fault_spec=None,
-               sentinel=None, telemetry=None) -> tuple[Pytree, dict, dict]:
+               sentinel=None, telemetry=None,
+               microbatch=None) -> tuple[Pytree, dict, dict]:
     """One full SAFL round over all clients.
 
     ``batch`` leaves are shaped (G, K, mb, ...): G clients (sharded over the
@@ -188,9 +391,23 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     ``repro.obs.Telemetry``, threaded like ``plan`` via partial) adds the
     selected probe scalars to the metrics; it is None by default because any
     extra scan output shifts XLA fusion and hence the pinned f32
-    trajectories (DESIGN.md §11).  Returns (params, opt_state, metrics).
+    trajectories (DESIGN.md §11).  ``microbatch`` (static) streams the
+    aggregation over chunks of that many clients instead of materializing
+    the full cohort (DESIGN.md §12) -- ``None`` or any value >= G keeps the
+    materialized path below untouched, so the pinned trajectories survive.
+    Returns (params, opt_state, metrics).
     """
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
+
+    if microbatch is not None:
+        mb = resolve_microbatch(microbatch,
+                                jax.tree.leaves(batch)[0].shape[0])
+        if mb is not None:
+            return streamed_sketch_round(
+                cfg, lambda b: client_delta(cfg, loss_fn, params, b, eta),
+                params, opt_state, batch, round_key, mb, lr_scale=lr_scale,
+                plan=plan, part_mask=part_mask, fault_spec=fault_spec,
+                sentinel=sentinel, telemetry=telemetry)
 
     # --- client updates (vmapped over the client axis; params broadcast) ---
     deltas, losses = jax.vmap(
@@ -250,7 +467,8 @@ def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                  eta_scale: jax.Array | float = 1.0,
                  lr_scale: jax.Array | float = 1.0, *,
                  part_mask=None, fault_spec=None,
-                 sentinel=None, telemetry=None) -> tuple[Pytree, dict, dict]:
+                 sentinel=None, telemetry=None,
+                 microbatch=None) -> tuple[Pytree, dict, dict]:
     """Uncompressed FedOPT (Reddi et al. 2020) round: the paper's
     'ambient-dimension' reference line (legend 4e7 / 1e8).  Identical to
     safl_round with the identity compressor -- clients uplink raw deltas,
@@ -262,6 +480,15 @@ def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
             "baseline has no sketch payload -- run them on the SAFL/SACFL "
             "rounds")
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
+
+    if microbatch is not None:
+        mb = resolve_microbatch(microbatch,
+                                jax.tree.leaves(batch)[0].shape[0])
+        if mb is not None:
+            return _streamed_fedopt_round(
+                cfg, loss_fn, params, opt_state, batch, eta, mb,
+                lr_scale=lr_scale, part_mask=part_mask, telemetry=telemetry)
+
     deltas, losses = jax.vmap(
         lambda mb: client_delta(cfg, loss_fn, params, mb, eta))(batch)
     update = masked_mean_tree(deltas, part_mask)
@@ -276,6 +503,59 @@ def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
             telemetry, deltas=deltas, update=update, part_mask=part_mask,
             state=opt_state))
     return params, opt_state, metrics
+
+
+def _streamed_fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
+                           opt_state: dict, batch: Pytree, eta: jax.Array,
+                           mb: int, *, lr_scale=1.0, part_mask=None,
+                           telemetry=None) -> tuple[Pytree, dict, dict]:
+    """Streamed fold of the uncompressed FedOPT round: the raw-delta mean is
+    a plain weighted tree sum, so the microbatch carry is one O(d) tree plus
+    the weight/loss scalars instead of the (G, d) delta stack.  Same masked
+    tail contract as ``streamed_sketch_round``."""
+    if telemetry is not None:
+        raise ValueError(
+            "telemetry probes consume the materialized (G, ...) delta "
+            "stack; the streamed microbatch fold never builds it -- run "
+            "telemetry with microbatch=None")
+    G = jax.tree.leaves(batch)[0].shape[0]
+    n_mb = -(-G // mb)
+    pad = n_mb * mb - G
+    w0 = (jnp.ones((G,), jnp.float32) if part_mask is None
+          else mask_weights(part_mask).astype(jnp.float32))
+    xs = {"batch": chunk_clients(batch, mb, pad),
+          "w": jnp.pad(w0, (0, pad)).reshape(n_mb, mb)}
+    if pad:
+        xs["real"] = jnp.pad(jnp.ones((G,), bool),
+                             (0, pad)).reshape(n_mb, mb)
+
+    S0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+    def body(carry, xc):
+        S, W, L = carry
+        deltas, losses = jax.vmap(
+            lambda b: client_delta(cfg, loss_fn, params, b, eta))(xc["batch"])
+        w = xc["w"]
+        if pad:     # static: hard-zero the tail-pad rows
+            deltas = jax.tree.map(
+                lambda d: jnp.where(
+                    xc["real"].reshape((mb,) + (1,) * (d.ndim - 1)), d,
+                    jnp.float32(0.0)), deltas)
+            losses = jnp.where(xc["real"], losses, jnp.float32(0.0))
+        S = jax.tree.map(
+            lambda s, d: s + jnp.sum(
+                d * w.reshape((mb,) + (1,) * (d.ndim - 1)), axis=0),
+            S, deltas)
+        return (S, W + jnp.sum(w), L + jnp.sum(w * losses)), None
+
+    (S, W, L), _ = jax.lax.scan(
+        body, (S0, jnp.float32(0.0), jnp.float32(0.0)), xs)
+    den = (jnp.asarray(part_mask["den"], jnp.float32)
+           if isinstance(part_mask, dict) else jnp.maximum(W, 1.0))
+    update = jax.tree.map(lambda s: s / den, S)
+    params, opt_state = apply_update(cfg.server, opt_state, params, update,
+                                     lr_scale=lr_scale)
+    return params, opt_state, {"loss": L / den}
 
 
 def init_safl(cfg: SAFLConfig, params: Pytree) -> dict:

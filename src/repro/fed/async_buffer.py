@@ -51,7 +51,8 @@ from repro.core.clipped import ClippedSAFLConfig, clip_delta
 from repro.core.packed import (PackingPlan, derive_generation_params,
                                derive_round_params, desk_flat,
                                sk_packed_clients, unpack_tree)
-from repro.core.safl import SAFLConfig, client_delta, masked_mean
+from repro.core.safl import (SAFLConfig, chunk_clients, client_delta,
+                             masked_mean, resolve_microbatch)
 
 Pytree = Any
 LossFn = Callable[[Pytree, Any], jax.Array]
@@ -149,11 +150,20 @@ def init_async_state(cfg, acfg: AsyncConfig, params: Pytree,
 
 
 def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
-                     plan: PackingPlan):
+                     plan: PackingPlan, microbatch=None):
     """Build the async round function for the driver's ``buffer=`` hook.
 
     ``cfg`` is a ``SAFLConfig``, or a ``ClippedSAFLConfig`` to run the
     client half with SACFL's clipped deltas (heavy-tail setting).
+
+    ``microbatch`` (static) streams the client-delta + sketch stage over
+    chunks of that many clients (DESIGN.md §12): each chunk's rows land at
+    their GLOBAL client offsets in the staged ``(G, b_total)`` payload, so
+    the ring push/pop -- whose storage is inherently O(D * G * b_total) --
+    is unchanged, but the ``(G, d_total)`` delta stack never materializes.
+    ``None`` / >= G keeps the materialized path (and its bitwise pins)
+    untouched.  The driver threads the knob via ``functools.partial``
+    (``run_scan(..., microbatch=)``), which binds it to this fn's keyword.
 
     Signature of the returned fn (driver-compatible plus the buffer kwargs
     the hook supplies):
@@ -170,7 +180,7 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
 
     def round_fn(params, state, batch, round_key, *, t, base_key,
                  part_mask=None, lr_scale=1.0, fault_spec=None,
-                 sentinel=None):
+                 sentinel=None, microbatch=microbatch):
         eta = jnp.asarray(base.client_lr, jnp.float32)
 
         def one_client(mb):
@@ -178,8 +188,13 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
             return (clip_delta(clip, delta), l) if clip is not None \
                 else (delta, l)
 
-        deltas, losses = jax.vmap(one_client)(batch)
-        G = jax.tree.leaves(deltas)[0].shape[0]
+        mbv = resolve_microbatch(microbatch,
+                                 jax.tree.leaves(batch)[0].shape[0])
+        if mbv is None:
+            deltas, losses = jax.vmap(one_client)(batch)
+            G = jax.tree.leaves(deltas)[0].shape[0]
+        else:
+            G = jax.tree.leaves(batch)[0].shape[0]
         from repro.fed.participation import is_weighted_mask
         if is_weighted_mask(part_mask):
             raise TypeError(
@@ -195,7 +210,23 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
         # re-emit it at every later pop of that generation; a dropped or
         # rejected client stores weight 0, exactly like non-participation. --
         rp_t = derive_round_params(plan, round_key)
-        sks = sk_packed_clients(plan, rp_t, deltas).astype(jnp.float32)
+        if mbv is None:
+            sks = sk_packed_clients(plan, rp_t, deltas).astype(jnp.float32)
+        else:
+            # streamed staging (DESIGN.md §12): the scan's stacked ys land
+            # each chunk's sketch rows at their global client offsets; the
+            # tail-pad rows are sliced off before anything consumes them
+            n_mb = -(-G // mbv)
+            bc = chunk_clients(batch, mbv, n_mb * mbv - G)
+
+            def sk_chunk(carry, b1):
+                d, l = jax.vmap(one_client)(b1)
+                return carry, (sk_packed_clients(plan, rp_t, d)
+                               .astype(jnp.float32), l)
+
+            _, (sks_c, losses_c) = jax.lax.scan(sk_chunk, 0, bc)
+            sks = sks_c.reshape(n_mb * mbv, -1)[:G]
+            losses = losses_c.reshape(-1)[:G]
         counters = {}
         if fault_spec is not None or sentinel is not None:
             from repro.fed.robust import guard_uplink

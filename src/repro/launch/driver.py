@@ -47,6 +47,7 @@ evaluated in the scan body and passed to the round as ``fault_spec``
 
 from __future__ import annotations
 
+import functools
 import time
 from typing import Any, Callable, Optional
 
@@ -74,17 +75,34 @@ HISTORY_KEYS = ("loss", "uplink_bits") + COUNTER_KEYS + PROBE_KEYS
 
 
 def _with_bits(metrics: dict, bits_per_round: Optional[int],
-               mask=None) -> dict:
+               mask=None, num_clients: Optional[int] = None) -> dict:
     """Stack the per-round uplink payload next to the loss (f32: 32d bits of
     a 100M-param model overflows int32).  With a participation mask the
-    honest per-round figure is per-client bits x the sampled cohort size,
-    not x N (weighted masks carry their static cohort size as ``"n"``)."""
+    honest per-round figure is per-client bits x the EFFECTIVE post-guard
+    cohort: the sampled cohort size (weighted masks carry theirs statically
+    as ``"n"``) minus the round's fault drops and sentinel rejections -- a
+    dropped payload never reaches the server and a rejected one is
+    discarded, so neither is billed (the guarded rounds emit the
+    ``n_dropped``/``n_rejected`` counters this reads; an unguarded round
+    carries neither, leaving the no-fault program untouched).  Without a
+    mask, ``bits_per_round`` is the caller's whole-cohort per-round total
+    (seed semantics); when guard counters are present it is scaled by the
+    surviving fraction ``(num_clients - lost) / num_clients``
+    (``num_clients`` comes from the bound fault policy)."""
     if bits_per_round is None or "uplink_bits" in metrics:
         return metrics
     bits = jnp.asarray(bits_per_round, jnp.float32)
+    lost = None
+    if "n_dropped" in metrics or "n_rejected" in metrics:
+        lost = sum(metrics[k] for k in ("n_dropped", "n_rejected")
+                   if k in metrics)
     if mask is not None:
         n = mask["n"] if isinstance(mask, dict) else jnp.sum(mask)
+        if lost is not None:
+            n = n - lost
         bits = bits * n
+    elif lost is not None and num_clients is not None:
+        bits = bits * (num_clients - lost) / num_clients
     return {**metrics, "uplink_bits": bits}
 
 
@@ -123,7 +141,7 @@ _round_kwargs = round_hook_kwargs         # back-compat alias
 def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
                   kwargs_fn=None, bits_per_round: Optional[int] = None,
                   donate: bool = True, participation=None,
-                  buffer: bool = False, faults=None):
+                  buffer: bool = False, faults=None, microbatch=None):
     """Jit one scanned chunk of ``num_rounds`` rounds.
 
     Signature of the returned fn:
@@ -131,8 +149,13 @@ def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
             (params, state, data_state, stacked_metrics)
     ``t0`` is a traced scalar so successive chunks reuse one executable.
     ``participation``/``buffer``/``faults`` are the repro.fed hooks (module
-    docstring).
+    docstring).  ``microbatch`` (static) binds the streamed-aggregation
+    chunk size into the round fn (DESIGN.md §12); None leaves the round --
+    and the pinned programs -- untouched.
     """
+    if microbatch is not None:
+        round_fn = functools.partial(round_fn, microbatch=microbatch)
+    n_fault_clients = getattr(faults, "num_clients", None)
 
     def chunk(params, state, data_state, key, t0):
         def body(carry, t):
@@ -143,7 +166,8 @@ def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
             params, state, m = round_fn(params, state, batch,
                                         jax.random.fold_in(key, t), **kw)
             return (params, state, dstate), _with_bits(m, bits_per_round,
-                                                       mask)
+                                                       mask,
+                                                       n_fault_clients)
 
         (params, state, data_state), hist = jax.lax.scan(
             body, (params, state, data_state),
@@ -157,7 +181,7 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
              rounds: int, key: jax.Array, chunk_size: int = 0,
              kwargs_fn=None, bits_per_round: Optional[int] = None,
              donate: bool = True, on_chunk=None, participation=None,
-             buffer: bool = False, faults=None,
+             buffer: bool = False, faults=None, microbatch=None,
              start_round: int = 0, stream=None) -> tuple[Pytree, dict, dict]:
     """Run ``rounds`` federated rounds on device in scanned chunks.
 
@@ -171,6 +195,10 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     * ``participation``/``buffer`` are the repro.fed hooks (module
       docstring): the cohort mask is a pure function of the absolute round
       index, so chunk splits leave trajectories bit-identical.
+    * ``microbatch`` (static int) streams the round's aggregation over
+      chunks of that many clients (DESIGN.md §12: peak payload memory
+      O(microbatch x b_total) instead of O(G x b_total)); ``None`` (default)
+      and any value >= G keep the materialized round program untouched.
     * ``start_round`` resumes mid-trajectory at an absolute round index --
       the restart path for a ``(t, key)`` checkpoint cursor
       (examples/train_lm.py).  Because every per-round stream (data,
@@ -207,7 +235,8 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
             compiled[n] = make_chunk_fn(
                 round_fn, sampler, n, kwargs_fn=kwargs_fn,
                 bits_per_round=bits_per_round, donate=donate,
-                participation=participation, buffer=buffer, faults=faults)
+                participation=participation, buffer=buffer, faults=faults,
+                microbatch=microbatch)
         t_wall = time.perf_counter()
         params, state, data_state, hist = compiled[n](
             params, state, data_state, key, jnp.asarray(t, jnp.int32))
@@ -233,6 +262,7 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
                   rounds: int, key: jax.Array, kwargs_fn=None,
                   bits_per_round: Optional[int] = None, donate: bool = True,
                   participation=None, buffer: bool = False, faults=None,
+                  microbatch=None,
                   start_round: int = 0) -> tuple[Pytree, dict, dict]:
     """One-dispatch-per-round reference loop with the scan driver's exact
     key/batch sequence (fold_in(key, t); device-side sampling), including
@@ -243,6 +273,9 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     and R blocking metric fetches -- precisely what fig1/<algo> vs
     fig1/<algo>_scan measures.
     """
+    if microbatch is not None:
+        round_fn = functools.partial(round_fn, microbatch=microbatch)
+    n_fault_clients = getattr(faults, "num_clients", None)
     data_state = sampler.init_state()
     sample = jax.jit(sampler.sample)
     step = jax.jit(round_fn, donate_argnums=(0, 1) if donate else ())
@@ -255,6 +288,7 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
         params, state, m = step(params, state, batch,
                                 jax.random.fold_in(key, tt), **kw)
         hists.append(jax.tree.map(np.asarray,
-                                  _with_bits(m, bits_per_round, mask)))
+                                  _with_bits(m, bits_per_round, mask,
+                                             n_fault_clients)))
     history = jax.tree.map(lambda *xs: np.stack(xs), *hists)
     return params, state, history

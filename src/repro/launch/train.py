@@ -34,9 +34,10 @@ from repro.core.adaptive import AdaConfig, apply_update, init_opt_state
 from repro.core.packed import (PackingPlan, derive_generation_params,
                                derive_round_params, desk_flat,
                                make_sharded_packing_plan, pack_tree, sk_flat,
-                               unpack_tree)
-from repro.core.safl import (SAFLConfig, client_delta, mask_weights,
-                             masked_mean, masked_mean_tree, masked_psum_mean)
+                               sk_packed_clients_wsum, unpack_tree)
+from repro.core.safl import (SAFLConfig, chunk_clients, client_delta,
+                             mask_weights, masked_mean, masked_mean_tree,
+                             masked_psum_mean, resolve_microbatch)
 from repro.core.sketch import (SKETCH_CHUNK_NUMEL, SketchConfig, desk_leaf,
                                desk_leaf_stacked, sk_leaf, sk_leaf_stacked)
 from repro.fed.faults import corrupt_payload, take_rows
@@ -183,7 +184,7 @@ def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key,
 
 
 def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
-                                  key, w_loc=None, den=None):
+                                  key, w_loc=None, den=None, mb=None):
     """Plan-routed shard-local sketch, PER DEVICE inside shard_map.
 
     The static layout (``plan``, built once OUTSIDE the trace from the
@@ -196,8 +197,44 @@ def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
     shrinks the payload rows to the single cohort mean.  Being trace-free
     state -- only the round key is traced -- this is what lets the
     multi-round scan carry the sketch path with zero per-round host work
-    (DESIGN §8)."""
+    (DESIGN §8).
+
+    ``mb`` (optional) streams the shard-local sketch stage over chunks of
+    ``mb`` client rows (DESIGN §12): a ``lax.scan`` folds the fused
+    pack->sketch of each chunk into a running weighted sketch-sum, so the
+    (G_loc, b_total) payload is never materialized -- peak sketch memory is
+    O(mb * b_total).  The fold then needs exactly ONE psum of the
+    (b_total,) partial sum + its scalar weight over the client axes
+    (sketch linearity / mergeability, Property 1) before the single desk.
+    A non-dividing tail chunk is zero-padded with zero weight, which is
+    exact under the weighted sum."""
     rp = derive_round_params(plan, key)
+    if mb is not None:
+        g_loc = jax.tree_util.tree_leaves(deltas)[0].shape[0]
+        w = jnp.ones((g_loc,), jnp.float32) if w_loc is None else \
+            w_loc.astype(jnp.float32)
+        n_mb = -(-g_loc // mb)
+        pad = n_mb * mb - g_loc
+        dc = chunk_clients(deltas, mb, pad)          # (n_mb, mb, ...)
+        wc = jnp.pad(w, (0, pad)).reshape(n_mb, mb)  # pad rows weigh 0
+
+        def fold(carry, xc):
+            S, W = carry
+            dS, dW = sk_packed_clients_wsum(plan, rp, xc["d"], xc["w"])
+            return (S + dS, W + dW), None
+
+        S0 = jnp.zeros((plan.b_total,), jnp.float32)
+        (S, W), _ = jax.lax.scan(fold, (S0, jnp.float32(0.0)),
+                                 {"d": dc, "w": wc})
+        if client_axes:
+            S = jax.lax.psum(S, client_axes)
+            W = jax.lax.psum(W, client_axes)
+        denom = jnp.float32(den) if den is not None else \
+            jnp.maximum(W, jnp.float32(1.0))
+        mbar = S / denom
+        u = desk_flat(plan, rp, mbar)
+        out = unpack_tree(plan, u, cast=False)
+        return jax.tree.map(lambda x: x[None], out)  # (1, ...): cohort mean
     flat = jax.vmap(lambda t: pack_tree(plan, t))(deltas)   # (G_loc, d_loc)
     s = jax.vmap(lambda f: sk_flat(plan, rp, f))(flat)      # (G_loc, b_tot)
     s = _collect(s, client_axes, w_loc, den)   # <-- compressed uplink
@@ -207,7 +244,7 @@ def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
 
 def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
                             topology: str = "cross_device", plan=None,
-                            part_mask=None):
+                            part_mask=None, microbatch=None):
     """Sketch each client delta (shard-local), cohort-mean over client axes,
     desketch.
 
@@ -227,16 +264,38 @@ def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
     client axes and the aggregation becomes the masked cohort mean, fused
     into the same single collective the unmasked path uses
     (``core.safl.masked_psum_mean``).  An all-ones mask is pinned bitwise
-    to ``part_mask=None``."""
+    to ``part_mask=None``.
+
+    ``microbatch`` (optional) streams the SHARD-LOCAL sketch stage over
+    chunks of that many client rows (DESIGN §12): instead of materializing
+    the (G_loc, b_total) payload, each shard folds per-chunk weighted
+    sketch-sums and the collective shrinks to one psum of a (b_total,)
+    partial sum plus a scalar weight.  Requires the packed ``plan``.
+    ``None`` or >= the shard-local cohort keeps the materialized path
+    bitwise untouched; the streamed fold is its own program family, equal
+    to the materialized one up to float summation order."""
     client_axes = client_axes_of(mesh, topology)
     lead = client_axes if client_axes else None
     in_specs = jax.tree.map(
         lambda ps: P(*((lead,) + tuple(ps))), pspecs,
         is_leaf=lambda x: isinstance(x, P))
     out_specs = pspecs
+    mb = None
+    if microbatch is not None:
+        g = jax.tree.leaves(deltas)[0].shape[0]
+        g_loc = g // max(_axes_size(mesh, client_axes), 1)
+        mb = resolve_microbatch(microbatch, g_loc)
+        if mb is not None and plan is None:
+            raise ValueError(
+                "microbatch streaming needs the packed plan route; build "
+                "one with make_sharded_packing_plan (per-leaf reference "
+                "path folds the client axis leaf-by-leaf and cannot "
+                "stream)")
     if plan is not None:
         fn = functools.partial(_sketch_avg_desk_local_packed, plan,
                                client_axes)
+        if mb is not None:
+            fn = functools.partial(fn, mb=mb)
     else:
         fn = functools.partial(_sketch_avg_desk_local, skcfg, client_axes)
 
@@ -636,7 +695,7 @@ def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
 def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                      topology: str = "cross_device", *, participation=None,
                      buffer=None, faults=None, sentinel=None,
-                     telemetry=None):
+                     telemetry=None, microbatch=None):
     """The typed-key SAFL mesh round:
     ``core(params, state, batch, round_key, **hook_kwargs) ->
     (params, state, loss_or_metrics)``.
@@ -664,10 +723,38 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     sharded global delta tree, so GSPMD inserts the O(d) reductions they
     need -- an explicitly opt-in cost the compressed uplink never pays.
     ``telemetry=None`` (the default) leaves every program byte-identical to
-    the pinned trajectories."""
+    the pinned trajectories.
+
+    ``microbatch`` (static, optional) streams the shard-local sketch stage
+    over client-row chunks (DESIGN §12) -- plain (hookless /
+    participation-only) sketched cores only: the staleness buffer and the
+    fault/sentinel guard need the materialized per-client payload rows, and
+    telemetry probes read the materialized delta tree, so combining them
+    raises.  ``None`` / >= the shard-local cohort is the materialized path,
+    bitwise-pinned."""
     abstract, pspecs, plan = _mesh_plan(model_cfg, safl_cfg, mesh, topology)
     G = num_clients_of(mesh, topology)
     guarded = faults is not None or sentinel is not None
+    if microbatch is not None:
+        resolve_microbatch(microbatch, G)   # reject mb <= 0 at build time
+        if buffer is not None or guarded:
+            raise NotImplementedError(
+                "mesh microbatch streaming folds the payload before any "
+                "per-client row exists; the staleness buffer and the "
+                "fault/sentinel guard operate on materialized payload "
+                "rows -- run those hooks without microbatch=")
+        if telemetry is not None:
+            raise ValueError(
+                "telemetry probes read the materialized cohort delta "
+                "tree; drop telemetry= or microbatch=")
+        if safl_cfg.sketch.kind == "none":
+            raise ValueError(
+                "mesh microbatch streaming folds in sketch space; "
+                "fedopt (sketch.kind='none') has no sketch payload")
+        if plan is None:
+            raise ValueError(
+                "mesh microbatch streaming needs the packed plan route "
+                "(every local shard <= SKETCH_CHUNK_NUMEL)")
     if participation is not None:
         check_policy_clients(participation, G, "mesh driver")
     if guarded:
@@ -773,7 +860,7 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
         else:
             update = sharded_sketch_avg_desk(
                 mesh, safl_cfg.sketch, pspecs, deltas, key, topology,
-                plan=plan, part_mask=part_mask)
+                plan=plan, part_mask=part_mask, microbatch=microbatch)
         params, state = apply_update(safl_cfg.server, state, params, update)
         loss = (jnp.mean(losses) if part_mask is None
                 else masked_mean(losses, part_mask))
@@ -786,7 +873,7 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
 def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                          topology: str = "cross_device", *,
                          participation=None, buffer=None, faults=None,
-                         sentinel=None, telemetry=None):
+                         sentinel=None, telemetry=None, microbatch=None):
     """SAFL round on the mesh.  batch leaves: (G, K, mb, ...) with G = number
     of FL clients (data-parallel groups or pods, per ``topology``).
 
@@ -803,7 +890,8 @@ def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology,
                                     participation=participation,
                                     buffer=buffer, faults=faults,
-                                    sentinel=sentinel, telemetry=telemetry)
+                                    sentinel=sentinel, telemetry=telemetry,
+                                    microbatch=microbatch)
     hooked = (participation is not None or buffer is not None
               or faults is not None or sentinel is not None)
     if not hooked:
@@ -832,12 +920,13 @@ def _fedopt_cfg(safl_cfg: SAFLConfig) -> SAFLConfig:
 def make_fedopt_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                            topology: str = "cross_device", *,
                            participation=None, buffer=None, faults=None,
-                           sentinel=None, telemetry=None):
+                           sentinel=None, telemetry=None, microbatch=None):
     """Uncompressed FedOPT baseline: raw-delta mean = O(d) all-reduce."""
     return make_safl_train_step(model_cfg, _fedopt_cfg(safl_cfg), mesh,
                                 topology, participation=participation,
                                 buffer=buffer, faults=faults,
-                                sentinel=sentinel, telemetry=telemetry)
+                                sentinel=sentinel, telemetry=telemetry,
+                                microbatch=microbatch)
 
 
 # ---------------------------------------------------------------------------
@@ -862,7 +951,7 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                       topology: str = "cross_device", *, sampler,
                       num_rounds: int, donate: bool = True,
                       participation=None, buffer=None, faults=None,
-                      sentinel=None, telemetry=None):
+                      sentinel=None, telemetry=None, microbatch=None):
     """Jit ``num_rounds`` SAFL mesh rounds as ONE ``lax.scan`` dispatch.
 
     The scan sits OUTSIDE the shard_map round: each scanned step draws its
@@ -897,7 +986,8 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     core, pspecs = _make_round_core(model_cfg, safl_cfg, mesh, topology,
                                     participation=participation,
                                     buffer=buffer, faults=faults,
-                                    sentinel=sentinel, telemetry=telemetry)
+                                    sentinel=sentinel, telemetry=telemetry,
+                                    microbatch=microbatch)
 
     def chunk(params, opt_state, data_state, key_data, t0):
         def body(carry, t):
@@ -926,7 +1016,7 @@ def make_fedopt_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                         topology: str = "cross_device", *, sampler,
                         num_rounds: int, donate: bool = True,
                         participation=None, buffer=None, faults=None,
-                        sentinel=None, telemetry=None):
+                        sentinel=None, telemetry=None, microbatch=None):
     """Scanned uncompressed FedOPT mesh rounds (``sketch.kind == "none"``:
     the raw-delta O(d) all-reduce inside the same scan layout)."""
     return make_safl_scan_fn(model_cfg, _fedopt_cfg(safl_cfg), mesh,
@@ -934,7 +1024,7 @@ def make_fedopt_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                              num_rounds=num_rounds, donate=donate,
                              participation=participation, buffer=buffer,
                              faults=faults, sentinel=sentinel,
-                             telemetry=telemetry)
+                             telemetry=telemetry, microbatch=microbatch)
 
 
 def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
@@ -942,7 +1032,8 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
                   topology: str = "cross_device", chunk_size: int = 0,
                   start_round: int = 0, donate: bool = True, on_chunk=None,
                   participation=None, buffer=None, faults=None,
-                  sentinel=None, telemetry=None, stream=None):
+                  sentinel=None, telemetry=None, stream=None,
+                  microbatch=None):
     """Run ``rounds`` mesh rounds in scanned chunks (the multi-pod analogue
     of ``launch.driver.run_scan``).
 
@@ -971,6 +1062,12 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
     skips the in-memory accumulation, exactly as in
     ``launch.driver.run_scan`` (the returned ``history`` is then ``{}``).
 
+    ``microbatch`` (static int) streams each shard's sketch stage over
+    chunks of that many client rows (DESIGN §12; plain sketched cores
+    only -- combining with buffer/faults/sentinel/telemetry raises).
+    ``None`` or >= the shard-local cohort keeps the materialized program
+    bitwise-pinned.
+
     Returns ``(params, opt_state, history)`` with host-side
     ``(rounds - start_round,)`` arrays (key set:
     ``launch.driver.HISTORY_KEYS``)."""
@@ -991,7 +1088,7 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
                 model_cfg, safl_cfg, mesh, topology, sampler=sampler,
                 num_rounds=n, donate=donate, participation=participation,
                 buffer=buffer, faults=faults, sentinel=sentinel,
-                telemetry=telemetry)
+                telemetry=telemetry, microbatch=microbatch)
         t_wall = time.perf_counter()
         params, opt_state, data_state, _, hist = compiled[n](
             params, opt_state, data_state, jnp.asarray(kd_host),

@@ -231,6 +231,88 @@ def test_sharded_sketch_plan_route_matches_per_leaf(kind):
 
 
 # ---------------------------------------------------------------------------
+# streamed shard-local sketch fold (DESIGN §12, ISSUE 9)
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("mb", [1, 2])
+def test_mesh_microbatch_streamed_fold_matches(mb):
+    """With G_loc = 3 client rows per pod, microbatch=1/2 folds the
+    shard-local sketch stage over chunks (mb=2 leaves a masked tail row)
+    and reduces ONE (b_total,) partial sum + scalar weight over the client
+    axes -- the result matches the materialized (G_loc, b_total) payload
+    path up to float summation order, masked and unmasked."""
+    topology = "cross_silo"
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    skcfg = SketchConfig(kind="countsketch", ratio=0.1, min_b=8)
+    with use_mesh(mesh):
+        abstract, pspecs = _mesh_pspecs(MODEL, topology)
+        plan = make_sharded_packing_plan(skcfg, abstract, pspecs,
+                                         dict(mesh.shape))
+        params = init_params(MODEL, jax.random.key(0))
+        G = 6                        # 3 rows per pod: the fold is exercised
+        deltas = jax.tree.map(
+            lambda p: jax.random.normal(jax.random.key(9),
+                                        (G,) + p.shape, jnp.float32), params)
+        key = jax.random.key(3)
+        ref = jax.jit(lambda d, k: sharded_sketch_avg_desk(
+            mesh, skcfg, pspecs, d, k, topology, plan=plan))(deltas, key)
+        got = jax.jit(lambda d, k: sharded_sketch_avg_desk(
+            mesh, skcfg, pspecs, d, k, topology, plan=plan,
+            microbatch=mb))(deltas, key)
+        mask = jnp.array([1., 0., 1., 1., 0., 1.])
+        refm = jax.jit(lambda d, k: sharded_sketch_avg_desk(
+            mesh, skcfg, pspecs, d, k, topology, plan=plan,
+            part_mask=mask))(deltas, key)
+        gotm = jax.jit(lambda d, k: sharded_sketch_avg_desk(
+            mesh, skcfg, pspecs, d, k, topology, plan=plan, part_mask=mask,
+            microbatch=mb))(deltas, key)
+    for a, b in ((ref, got), (refm, gotm)):
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=3e-5, atol=3e-6)
+
+
+@needs8
+def test_mesh_microbatch_ge_gloc_is_bitwise_pinned():
+    """microbatch >= the shard-local cohort resolves to the materialized
+    program: run_mesh_scan trajectories are bit-identical to microbatch
+    absent (the mesh analogue of the single-host routing pin)."""
+    mesh, cfg, smp = _mk("cross_silo")
+    with use_mesh(mesh):
+        key = jax.random.key(42)
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology="cross_silo")
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology="cross_silo",
+                                   microbatch=64)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(o1, o2)
+
+
+@needs8
+def test_mesh_microbatch_hook_combinations_raise():
+    """Streaming folds the payload before per-client rows exist: the
+    staleness buffer and the fault/sentinel guard (materialized-row
+    consumers) refuse to combine with it, as does fedopt (no sketch)."""
+    mesh, cfg, smp = _mk("cross_silo")
+    with use_mesh(mesh):
+        with pytest.raises(NotImplementedError, match="microbatch"):
+            train_mod._make_round_core(
+                MODEL, cfg, mesh, "cross_silo", buffer=AsyncConfig(),
+                microbatch=1)
+        with pytest.raises(NotImplementedError, match="microbatch"):
+            train_mod._make_round_core(
+                MODEL, cfg, mesh, "cross_silo",
+                sentinel=SentinelConfig(norm_mult=0.0), microbatch=1)
+        with pytest.raises(ValueError, match="sketch"):
+            train_mod._make_round_core(
+                MODEL, train_mod._fedopt_cfg(cfg), mesh, "cross_silo",
+                microbatch=1)
+
+
+# ---------------------------------------------------------------------------
 # repro.fed hooks on the mesh driver (ISSUE 5, DESIGN §9)
 # ---------------------------------------------------------------------------
 
