@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                           style async staleness rows on the scanned driver
   fig1_faults           : deterministic fault injection + sketch-space
                           sentinels (repro.fed.faults/robust, DESIGN §10)
+  codec_rows            : quantized payload codec (int8 / 1-bit stochastic
+                          rounding + sketch-space error feedback) with the
+                          MEASURED wire size next to final loss (DESIGN §13)
   fig2_finetune         : finetuning regime comparison (paper Fig. 2)
   fig3_sketch_sizes     : convergence vs sketch size b (paper Fig. 3 / Fig. 6)
   table1_comm_bits      : per-round uplink bits per algorithm (paper Table 1)
@@ -49,9 +52,9 @@ from repro.core.sketch import (SketchConfig, desketch_tree, sk_leaf,
                                sketch_tree, total_sketch_bits)
 from repro.data import (BigramLMData, ClsDataConfig, GaussianClsData,
                         LMDataConfig)
-from repro.fed import (AsyncConfig, FaultConfig, SentinelConfig,
+from repro.fed import (AsyncConfig, CodecConfig, FaultConfig, SentinelConfig,
                        UniformParticipation, init_async_state,
-                       make_async_round)
+                       init_codec_state, make_async_round)
 from repro.launch.driver import make_chunk_fn
 from repro.models import ModelConfig, init_params, loss_fn
 from repro.obs.shards import span_stats
@@ -165,7 +168,7 @@ def _setup(algo: str, sketch_ratio: float, rounds: int, seed: int):
 
 def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
            seed: int = 0, scan: bool = False, participation=None,
-           async_cfg=None, faults=None, sentinel=None):
+           async_cfg=None, faults=None, sentinel=None, codec=None):
     """Train the bench model with one algorithm; returns (final_loss,
     us_per_round, uplink_bits_per_round, stats) where ``stats`` is the
     per-round wall-time p50/p95 over the timed scan runs (``None`` on the
@@ -212,6 +215,18 @@ def _train(algo: str, sketch_ratio: float = 0.05, rounds: int = ROUNDS,
         round_fn = functools.partial(round_fn, sentinel=sentinel)
     if faults is not None:
         assert scan, "fault rows ride the scanned driver's hooks"
+    if codec is not None:
+        assert scan and async_cfg is None and algo in ("safl", "clipped"), \
+            "codec rows ride the sketched sync scan driver"
+        round_fn = functools.partial(round_fn, codec=codec)
+        bits = codec.payload_bits(plan.b_total)   # measured wire size/client
+        if codec.error_feedback:
+            base_fresh = fresh
+
+            def fresh():
+                p, s = base_fresh()
+                return p, {"opt": s, "ef": init_codec_state(
+                    codec, CLIENTS, plan.b_total)}
 
     if scan:
         chunk = make_chunk_fn(round_fn, sampler, rounds,
@@ -307,6 +322,30 @@ def fig1_faults():
           f"final_loss={final:.4f};uplink_bits={bits};"
           f"drop/nan/byz=0.05each;norm_mult=10;steady_state",
           final_loss=final, stats=st)
+
+
+def codec_rows():
+    """Quantized payload codec rows (repro.fed.codec, DESIGN §13): the
+    packed sketch uplink is stochastically rounded to int8 / 1-bit with
+    sketch-space error feedback, and the reported uplink bits are the
+    MEASURED encoded size per client (mantissa bits + the 32-bit per-row
+    scale) -- real bits on the wire, priced NEXT TO the final loss so the
+    accuracy/bandwidth trade is one row.  The ratio vs the float32 payload
+    is 8/32 + 1/b_total (int8) and 1/32 + 1/b_total (1-bit): the scale
+    word is real overhead and is billed, not hidden.  Guarded _scan rows:
+    steady state under the 2x time budget, exact final-loss pins."""
+    params0 = init_params(MODEL, jax.random.key(0))
+    plan = make_packing_plan(SketchConfig(kind="countsketch", ratio=0.05,
+                                          min_b=8), params0)
+    f32_bits = 32 * plan.b_total
+    for tag, qbits in (("int8", 8), ("1bit", 1)):
+        codec = CodecConfig(bits=qbits)
+        final, us, wire, st = _train("safl", scan=True, codec=codec)
+        _emit(f"codec/safl_{tag}_scan", us,
+              f"final_loss={final:.4f};measured_bits_per_client={wire};"
+              f"float32_bits={f32_bits};ratio={wire / f32_bits:.4f};"
+              f"error_feedback=on;steady_state",
+              final_loss=final, stats=st)
 
 
 def fig2_finetune():
@@ -719,6 +758,7 @@ def main() -> None:
         fig1_resnet_scratch()
         fig1_participation()
         fig1_faults()
+        codec_rows()
         fig2_finetune()
         fig5_hessian_spectrum()
         sketch_ops()

@@ -1,6 +1,15 @@
 """Serve a small model with batched greedy decoding through the KV-cache
 decode path (the same decode_step the production dry-run lowers).
 
+A minimal, config-free version of ``repro.launch.serve``: builds a small
+sliding-window-attention transformer inline, initializes its ring-buffered
+KV cache, and greedy-decodes a batch of sequences one token at a time
+through a jitted ``decode_step``, printing tokens/sec and the head of the
+first decoded sequence.  Use this to sanity-check the decode path (cache
+layout, SWA ring indexing, argmax sampling) on any machine in seconds;
+``python -m repro.launch.serve`` is the flagged driver for the real named
+architectures.
+
     PYTHONPATH=src python examples/serve.py
 """
 import time

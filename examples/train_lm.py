@@ -29,6 +29,13 @@ summary.  Render with ``python tools/obs_report.py <dir>``.  NOTE the
 probes are extra scan outputs, so a --telemetry trajectory is its own
 program family -- bit-comparable to other --telemetry runs, not to the
 probe-free default (the fusion caveat DESIGN §11 documents).
+
+Payload codec (DESIGN.md §13): --codec int8 / --codec 1bit quantizes the
+packed sketch uplink with stochastic rounding + sketch-space error
+feedback, and switches uplink_bits to the MEASURED encoded size
+(per-row scale + mantissa bits, billed to the clients that actually
+transmitted).  The EF memory rides in the scanned optimizer state, so
+--resume round-trips it like any other carry leaf.
 """
 import argparse
 import functools
@@ -43,8 +50,9 @@ from repro.core.packed import make_packing_plan
 from repro.core.safl import SAFLConfig, fedopt_round, init_safl, safl_round
 from repro.core.sketch import SketchConfig
 from repro.data import BigramLMData, LMDataConfig
-from repro.fed import AsyncConfig, FaultConfig, SentinelConfig, \
-    UniformParticipation, init_async_state, make_async_round
+from repro.fed import AsyncConfig, CodecConfig, FaultConfig, \
+    SentinelConfig, UniformParticipation, init_async_state, \
+    init_codec_state, make_async_round
 from repro.launch.driver import run_scan
 from repro.launch.supervisor import SupervisorConfig, format_recovery_log, \
     run_supervised
@@ -85,6 +93,11 @@ ap.add_argument("--telemetry", action="store_true",
 ap.add_argument("--telemetry-out", default=None, metavar="PATH",
                 help="run directory for the telemetry shards/manifest "
                 "(default: <--ckpt>_obs)")
+ap.add_argument("--codec", choices=["int8", "1bit"], default=None,
+                help="quantize the packed sketch uplink with the payload "
+                "codec (stochastic rounding + sketch-space error feedback, "
+                "repro.fed.codec, DESIGN.md §13); uplink_bits becomes the "
+                "measured encoded size")
 ap.add_argument("--resume", action="store_true",
                 help="restart from --ckpt's (t, key) cursor and resume the "
                 "EXACT trajectory (pass the same model/algorithm flags): "
@@ -126,19 +139,38 @@ if args.fedopt and args.async_buffer > 0:
 if args.fedopt and (args.faults > 0 or args.sentinel):
     ap.error("--faults/--sentinel act on the packed sketch uplink; the "
              "uncompressed FedOPT reference has no sketch payload")
+if args.fedopt and args.codec:
+    ap.error("--codec quantizes the packed sketch uplink; the uncompressed "
+             "FedOPT reference has no sketch payload")
+if args.codec and args.telemetry:
+    ap.error("--telemetry probes read the bare server opt state; under the "
+             "codec's error feedback the round state is the wrapped "
+             "{'opt','ef'} dict -- run one or the other")
 
 sentinel = SentinelConfig(norm_mult=10.0) if args.sentinel else None
+codec = None
+if args.codec:
+    codec = CodecConfig(bits=8 if args.codec == "int8" else 1)
 plan = make_packing_plan(safl.sketch, params)
 async_cfg = None
 if args.fedopt:
     round_fn = functools.partial(fedopt_round, safl, loss)
 elif args.async_buffer > 0:
     async_cfg = AsyncConfig(max_delay=args.async_buffer, delay="uniform")
-    round_fn = make_async_round(safl, loss, async_cfg, plan)
+    round_fn = make_async_round(safl, loss, async_cfg, plan, codec=codec)
     opt = init_async_state(safl, async_cfg, params, plan,
-                           data.cfg.num_clients)
+                           data.cfg.num_clients, codec=codec)
 else:
     round_fn = functools.partial(safl_round, safl, loss, plan=plan)
+    if codec is not None:
+        # static config, binds like plan=/sentinel= (DESIGN.md §13).  The
+        # error-feedback memory becomes an extra optimizer-state leaf so the
+        # scan carries it and --resume round-trips it.
+        round_fn = functools.partial(round_fn, codec=codec)
+        if codec.error_feedback:
+            opt = {"opt": opt,
+                   "ef": init_codec_state(codec, data.cfg.num_clients,
+                                          plan.b_total)}
 if sentinel is not None:
     # static config: binds like plan=, not a traced kwarg (DESIGN.md §10)
     round_fn = functools.partial(round_fn, sentinel=sentinel)
@@ -174,6 +206,10 @@ if args.participation_frac < 1.0:
           f"/{data.cfg.num_clients} clients per round")
 if async_cfg is not None:
     print(f"async staleness buffer: max delay {async_cfg.max_delay} rounds")
+if codec is not None:
+    print(f"payload codec: {args.codec} "
+          f"({codec.payload_bits(plan.b_total)} measured bits/client/round "
+          f"vs {32 * plan.b_total} float32)")
 
 n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
 print(f"{'FedOPT' if args.fedopt else 'SAFL'} on {n/1e6:.1f}M params, "

@@ -23,7 +23,8 @@ from repro.core.adaptive import apply_update
 from repro.core.packed import (derive_round_params, desk_packed,
                                make_packing_plan, sk_packed_clients)
 from repro.core.safl import (SAFLConfig, client_delta, masked_mean,
-                             resolve_microbatch, streamed_sketch_round)
+                             masked_where_tree, resolve_microbatch,
+                             streamed_sketch_round)
 
 Pytree = Any
 LossFn = Callable[[Pytree, Any], jax.Array]
@@ -67,7 +68,8 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
                        round_key: jax.Array, *,
                        plan=None, part_mask=None, fault_spec=None,
                        sentinel=None, telemetry=None,
-                       microbatch=None) -> tuple[Pytree, dict, dict]:
+                       microbatch=None,
+                       codec=None) -> tuple[Pytree, dict, dict]:
     """One SAFL round with per-client delta clipping (heavy-tail defense).
 
     batch leaves: (G, K, mb, ...) as in safl_round; ``plan``/``part_mask``/
@@ -80,7 +82,15 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
     the cohort fraction whose pre-clip delta norm exceeded tau.
     ``microbatch`` streams the aggregation over client chunks exactly as in
     ``safl_round`` (clipping is per-client and so commutes with the fold);
-    None / >= G keeps the materialized path below untouched."""
+    None / >= G keeps the materialized path below untouched.  ``codec``
+    quantizes the sketched (post-clip) uplink exactly as in ``safl_round``
+    (DESIGN.md §13): clipping acts on the true delta before compression, so
+    the codec composes with it the same way sketching does."""
+    if codec is not None and telemetry is not None:
+        raise ValueError(
+            "telemetry probes read the bare server opt state; under "
+            "codec.error_feedback the round state is the wrapped "
+            "{'opt', 'ef'} dict -- run telemetry without a codec")
     base = cfg.base
     eta = jnp.asarray(base.client_lr, jnp.float32)
 
@@ -94,7 +104,13 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
             return streamed_sketch_round(
                 base, clipped_client, params, opt_state, batch, round_key,
                 mb, plan=plan, part_mask=part_mask, fault_spec=fault_spec,
-                sentinel=sentinel, telemetry=telemetry)
+                sentinel=sentinel, telemetry=telemetry, codec=codec)
+
+    ef_wrapped = codec is not None and codec.error_feedback
+    opt_orig = opt_state
+    ef = None
+    if ef_wrapped:
+        ef, opt_state = opt_orig["ef"], opt_orig["opt"]
 
     probe_clip = telemetry is not None and telemetry.clip
 
@@ -115,6 +131,15 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
         plan = make_packing_plan(base.sketch, params)
     rp = derive_round_params(plan, round_key)
     sketches = sk_packed_clients(plan, rp, deltas)
+    if codec is not None:   # decode before corruption/vetting, DESIGN.md §13
+        from repro.fed.codec import encode_decode
+        sketches = sketches.astype(jnp.float32)
+        if ef_wrapped:
+            sketches, ef_new = encode_decode(codec, round_key, sketches,
+                                             ef_rows=ef)
+            ef = masked_where_tree(part_mask, ef_new, ef)
+        else:
+            sketches, _ = encode_decode(codec, round_key, sketches)
     counters = {}
     if fault_spec is not None or sentinel is not None:
         from repro.fed.robust import guard_uplink
@@ -123,11 +148,18 @@ def clipped_safl_round(cfg: ClippedSAFLConfig, loss_fn: LossFn,
     mbar = masked_mean(sketches, part_mask)
     update = desk_packed(plan, rp, mbar)
     new_params, new_opt = apply_update(base.server, opt_state, params, update)
+    if ef_wrapped:
+        new_opt = {"opt": new_opt, "ef": ef}
+    if codec is not None:
+        from repro.fed.codec import measured_uplink_bits
+        counters["uplink_bits"] = measured_uplink_bits(
+            codec, plan.b_total, eff_mask=part_mask,
+            num_clients=losses.shape[0])
     loss = masked_mean(losses, part_mask)
     if sentinel is not None:
         from repro.fed.robust import carry_if_empty, divergence_flag
         new_params, new_opt = carry_if_empty(
-            part_mask, (new_params, new_opt), (params, opt_state))
+            part_mask, (new_params, new_opt), (params, opt_orig))
         counters = {**counters, "diverged": divergence_flag(sentinel, loss)}
     metrics = {"loss": loss, **counters}
     if telemetry is not None:

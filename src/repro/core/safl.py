@@ -219,7 +219,8 @@ def streamed_sketch_round(cfg: SAFLConfig, client_fn, params: Pytree,
                           round_key: jax.Array, mb: int, *,
                           lr_scale: jax.Array | float = 1.0, plan=None,
                           part_mask=None, fault_spec=None, sentinel=None,
-                          telemetry=None) -> tuple[Pytree, dict, dict]:
+                          telemetry=None,
+                          codec=None) -> tuple[Pytree, dict, dict]:
     """One sketched round as a fold over client microbatches (DESIGN.md §12).
 
     Instead of materializing the ``(G, d_total)`` delta stack and the
@@ -251,6 +252,16 @@ def streamed_sketch_round(cfg: SAFLConfig, client_fn, params: Pytree,
     0 AND a statically zeroed payload/loss (pad positions are known at
     trace time), so not even a NaN produced by the synthetic zero batch can
     leak into the sums.
+
+    ``codec`` (static ``fed.codec.CodecConfig``, threaded like ``plan``)
+    quantize-dequantizes each chunk's payload rows BEFORE the fault/
+    sentinel stages (DESIGN.md §13): the rounding uniforms key off the
+    GLOBAL client index, so the fold draws exactly the uniforms the
+    materialized path would, and the error-feedback memory rides the xs as
+    global-offset row slices with the per-chunk residual emitted as scan
+    ys (the fold's linearity argument is unchanged -- it sums DECODED
+    rows).  With ``codec.error_feedback``, ``opt_state`` is the wrapped
+    ``{"opt": ..., "ef": (G, b_total)}`` dict.
     """
     if telemetry is not None:
         raise ValueError(
@@ -260,6 +271,14 @@ def streamed_sketch_round(cfg: SAFLConfig, client_fn, params: Pytree,
     if plan is None:
         plan = make_packing_plan(cfg.sketch, params)
     rp = derive_round_params(plan, round_key)
+
+    ef_wrapped = codec is not None and codec.error_feedback
+    opt_orig = opt_state
+    ef = None
+    if ef_wrapped:
+        ef, opt_state = opt_orig["ef"], opt_orig["opt"]
+    if codec is not None:
+        from repro.fed.codec import encode_decode
 
     G = jax.tree.leaves(batch)[0].shape[0]
     n_mb = -(-G // mb)
@@ -275,21 +294,35 @@ def streamed_sketch_round(cfg: SAFLConfig, client_fn, params: Pytree,
     if fault_spec is not None:
         spec_p = _pad_fault_spec(fault_spec, pad)
         xs["spec"] = {k: v.reshape((n_mb, mb)) for k, v in spec_p.items()}
+    if codec is not None:
+        # global client ids key the rounding uniforms; pad ids are harmless
+        # (their rows are statically zeroed and weight-0)
+        xs["cid"] = jnp.pad(jnp.arange(G, dtype=jnp.int32),
+                            (0, pad)).reshape(n_mb, mb)
+        if ef_wrapped:
+            xs["ef"] = jnp.pad(ef, ((0, pad), (0, 0))).reshape(n_mb, mb, -1)
 
     def chunk_payload(xc):
-        """One chunk's (mb, b_total) sketches, (mb,) losses and post-arrival
-        weights, §10 order (corruption before any vetting)."""
+        """One chunk's (mb, b_total) sketches, (mb,) losses, post-arrival
+        weights and EF residual, §10/§13 order (decode before corruption
+        before any vetting)."""
         deltas, losses = jax.vmap(client_fn)(xc["batch"])
         sks = sk_packed_clients(plan, rp, deltas).astype(jnp.float32)
         if pad:     # static: hard-zero the tail-pad rows
             sks = jnp.where(xc["real"][:, None], sks, jnp.float32(0.0))
             losses = jnp.where(xc["real"], losses, jnp.float32(0.0))
+        ef_c = None
+        if codec is not None:
+            sks, ef_c = encode_decode(
+                codec, round_key, sks,
+                ef_rows=xc["ef"] if ef_wrapped else None,
+                client_ids=xc["cid"])
         w = xc["w"]
         if fault_spec is not None:
             from repro.fed.faults import corrupt_payload
             sks = corrupt_payload(xc["spec"], sks)
             w = w * xc["spec"]["arrive"]
-        return sks, losses, w
+        return sks, losses, w, ef_c
 
     counters = {}
     if fault_spec is not None:
@@ -297,35 +330,45 @@ def streamed_sketch_round(cfg: SAFLConfig, client_fn, params: Pytree,
         counters["n_dropped"] = n_dropped(fault_spec, part_mask)
 
     S0 = jnp.zeros((plan.b_total,), jnp.float32)
+    n_tx = None                  # billed transmitters (codec accounting)
     if sentinel is None or sentinel.norm_mult == 0.0:
         # single pass: the finite-check verdict is row-local, so faults ->
         # sentinel -> mask fuse inside each chunk
+        init = (S0, jnp.float32(0.0), jnp.float32(0.0),
+                jnp.zeros((), jnp.int32))
+        if codec is not None:    # extra carry leaf: codec's program family
+            init += (jnp.float32(0.0),)
+
         def body(carry, xc):
-            S, W, L, n_rej = carry
-            sks, losses, w = chunk_payload(xc)
+            S, W, L, n_rej = carry[:4]
+            sks, losses, w, ef_c = chunk_payload(xc)
             if sentinel is not None:
                 ok = jnp.isfinite(sks).all(axis=-1)
                 sks = jnp.where(ok[:, None], sks, jnp.float32(0.0))
                 n_rej = n_rej + jnp.sum((w > 0) & ~ok)
                 w = w * ok.astype(jnp.float32)
-            return (S + jnp.sum(sks * w[:, None], axis=0), W + jnp.sum(w),
-                    L + jnp.sum(w * losses), n_rej), None
+            out = (S + jnp.sum(sks * w[:, None], axis=0), W + jnp.sum(w),
+                   L + jnp.sum(w * losses), n_rej)
+            if codec is not None:
+                out += (carry[4] + jnp.sum((w > 0).astype(jnp.float32)),)
+            return out, ef_c
 
-        (S, W, L, n_rej), _ = jax.lax.scan(
-            body, (S0, jnp.float32(0.0), jnp.float32(0.0),
-                   jnp.zeros((), jnp.int32)), xs)
+        res, ef_ys = jax.lax.scan(body, init, xs)
+        S, W, L, n_rej = res[:4]
+        if codec is not None:
+            n_tx = res[4]
         if sentinel is not None:
             counters["n_rejected"] = n_rej
     else:
         # two-pass: the norm-outlier median needs the whole cohort's stats
         def stats(carry, xc):
-            sks, losses, w = chunk_payload(xc)
+            sks, losses, w, ef_c = chunk_payload(xc)
             ok = jnp.isfinite(sks).all(axis=-1)
             clean = jnp.where(ok[:, None], sks, jnp.float32(0.0))
             return carry, (losses, jnp.sum(jnp.square(clean), axis=-1),
-                           ok, w)
+                           ok, w, ef_c)
 
-        _, (losses_c, nrm2_c, ok_c, w_c) = jax.lax.scan(stats, 0, xs)
+        _, (losses_c, nrm2_c, ok_c, w_c, ef_ys) = jax.lax.scan(stats, 0, xs)
         losses_p, nrm2_p = losses_c.reshape(-1), nrm2_c.reshape(-1)
         ok_p, w_arr = ok_c.reshape(-1), w_c.reshape(-1)
         from repro.fed.robust import masked_median
@@ -334,13 +377,16 @@ def streamed_sketch_round(cfg: SAFLConfig, client_fn, params: Pytree,
         valid = ok_p & (nrm2_p <= sentinel.norm_mult ** 2 * med2)
         counters["n_rejected"] = jnp.sum((w_arr > 0) & ~valid)
         w_eff = w_arr * valid.astype(jnp.float32)
+        if codec is not None:
+            n_tx = jnp.sum((w_eff > 0).astype(jnp.float32))
 
         xs2 = {**xs, "ok": ok_c, "we": w_eff.reshape(n_mb, mb)}
 
         def accum(S, xc):
-            # deltas/sketches are pure in (params, batch, rp): recomputing
-            # them is deterministic, so pass 2 streams the SAME payloads
-            sks, _, _ = chunk_payload(xc)
+            # deltas/sketches/codec draws are pure in (params, batch, rp,
+            # round_key): recomputing them is deterministic, so pass 2
+            # streams the SAME (decoded) payloads
+            sks, _, _, _ = chunk_payload(xc)
             clean = jnp.where(xc["ok"][:, None], sks, jnp.float32(0.0))
             return S + jnp.sum(clean * xc["we"][:, None], axis=0), None
 
@@ -356,12 +402,23 @@ def streamed_sketch_round(cfg: SAFLConfig, client_fn, params: Pytree,
     update = desk_packed(plan, rp, mbar)
     new_params, new_opt = apply_update(cfg.server, opt_state, params, update,
                                        lr_scale=lr_scale)
+    if ef_wrapped:
+        # unsampled clients (pre-fault weight 0) freeze their EF memory;
+        # the tail-pad ys rows are sliced off before anything reads them
+        ef_new = ef_ys.reshape(n_mb * mb, -1)[:G]
+        new_opt = {"opt": new_opt,
+                   "ef": jnp.where((w0 > 0)[:, None], ef_new, ef)}
+    if codec is not None:
+        counters["uplink_bits"] = (
+            jnp.float32(codec.payload_bits(plan.b_total)) * n_tx)
     if sentinel is not None:
         from repro.fed.robust import carry_if_empty, divergence_flag
         # the scalar surviving weight W plays the eff-mask role: its sum is
-        # itself, which is all carry_if_empty consumes
+        # itself, which is all carry_if_empty consumes.  The wrapped EF
+        # memory reverts with the server state on an empty cohort
+        # (conservative; DESIGN.md §13)
         new_params, new_opt = carry_if_empty(W, (new_params, new_opt),
-                                             (params, opt_state))
+                                             (params, opt_orig))
         counters = {**counters, "diverged": divergence_flag(sentinel, loss)}
     return new_params, new_opt, {"loss": loss, **counters}
 
@@ -372,7 +429,7 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                lr_scale: jax.Array | float = 1.0, *,
                plan=None, part_mask=None, fault_spec=None,
                sentinel=None, telemetry=None,
-               microbatch=None) -> tuple[Pytree, dict, dict]:
+               microbatch=None, codec=None) -> tuple[Pytree, dict, dict]:
     """One full SAFL round over all clients.
 
     ``batch`` leaves are shaped (G, K, mb, ...): G clients (sharded over the
@@ -395,8 +452,21 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     aggregation over chunks of that many clients instead of materializing
     the full cohort (DESIGN.md §12) -- ``None`` or any value >= G keeps the
     materialized path below untouched, so the pinned trajectories survive.
+    ``codec`` (static ``fed.codec.CodecConfig``, threaded like ``plan``)
+    quantize-dequantizes the payload rows between the fused sketch and the
+    guard/mean stages, with sketch-space error feedback, and replaces the
+    float32 ``uplink_bits`` fiction with the MEASURED encoded size
+    (DESIGN.md §13); ``codec=None`` routes at Python level, keeping the
+    pinned trajectories byte-identical.  With ``codec.error_feedback``,
+    ``opt_state`` is the wrapped ``{"opt": ..., "ef": (G, b_total)}`` dict
+    (``fed.codec.init_codec_state``).
     Returns (params, opt_state, metrics).
     """
+    if codec is not None and telemetry is not None:
+        raise ValueError(
+            "telemetry probes read the bare server opt state; under "
+            "codec.error_feedback the round state is the wrapped "
+            "{'opt', 'ef'} dict -- run telemetry without a codec")
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
 
     if microbatch is not None:
@@ -407,7 +477,13 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                 cfg, lambda b: client_delta(cfg, loss_fn, params, b, eta),
                 params, opt_state, batch, round_key, mb, lr_scale=lr_scale,
                 plan=plan, part_mask=part_mask, fault_spec=fault_spec,
-                sentinel=sentinel, telemetry=telemetry)
+                sentinel=sentinel, telemetry=telemetry, codec=codec)
+
+    ef_wrapped = codec is not None and codec.error_feedback
+    opt_orig = opt_state
+    ef = None
+    if ef_wrapped:
+        ef, opt_state = opt_orig["ef"], opt_orig["opt"]
 
     # --- client updates (vmapped over the client axis; params broadcast) ---
     deltas, losses = jax.vmap(
@@ -421,6 +497,20 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
         plan = make_packing_plan(cfg.sketch, params)
     rp = derive_round_params(plan, round_key)
     sketches = sk_packed_clients(plan, rp, deltas)
+
+    # --- payload codec (DESIGN.md §13): quantize-dequantize each client's
+    # row (plus its EF residual) BEFORE faults/sentinels -- corruption
+    # happens in transit to the ENCODED bytes, and the server can only vet
+    # what it decodes.  Unsampled clients freeze their EF memory. ---
+    if codec is not None:
+        from repro.fed.codec import encode_decode
+        sketches = sketches.astype(jnp.float32)
+        if ef_wrapped:
+            sketches, ef_new = encode_decode(codec, round_key, sketches,
+                                             ef_rows=ef)
+            ef = masked_where_tree(part_mask, ef_new, ef)
+        else:
+            sketches, _ = encode_decode(codec, round_key, sketches)
 
     # --- fault injection + sentinel rejection, both in sketch space; the
     # survivors' weights land in the SAME mask the cohort mean already
@@ -443,12 +533,23 @@ def safl_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
     update = desk_packed(plan, rp, mbar)
     new_params, new_opt = apply_update(cfg.server, opt_state, params, update,
                                        lr_scale=lr_scale)
+    if ef_wrapped:
+        new_opt = {"opt": new_opt, "ef": ef}
+    if codec is not None:
+        # MEASURED wire size: encoded row bits x the effective post-guard
+        # transmitting cohort (guard_uplink rebound part_mask above)
+        from repro.fed.codec import measured_uplink_bits
+        counters["uplink_bits"] = measured_uplink_bits(
+            codec, plan.b_total, eff_mask=part_mask,
+            num_clients=losses.shape[0])
 
     loss = masked_mean(losses, part_mask)
     if sentinel is not None:
         from repro.fed.robust import carry_if_empty, divergence_flag
+        # the wrapped EF memory reverts with the server state on an empty
+        # cohort (conservative; DESIGN.md §13)
         new_params, new_opt = carry_if_empty(
-            part_mask, (new_params, new_opt), (params, opt_state))
+            part_mask, (new_params, new_opt), (params, opt_orig))
         counters = {**counters, "diverged": divergence_flag(sentinel, loss)}
 
     metrics = {"loss": loss, **counters}
@@ -468,7 +569,7 @@ def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
                  lr_scale: jax.Array | float = 1.0, *,
                  part_mask=None, fault_spec=None,
                  sentinel=None, telemetry=None,
-                 microbatch=None) -> tuple[Pytree, dict, dict]:
+                 microbatch=None, codec=None) -> tuple[Pytree, dict, dict]:
     """Uncompressed FedOPT (Reddi et al. 2020) round: the paper's
     'ambient-dimension' reference line (legend 4e7 / 1e8).  Identical to
     safl_round with the identity compressor -- clients uplink raw deltas,
@@ -478,6 +579,12 @@ def fedopt_round(cfg: SAFLConfig, loss_fn: LossFn, params: Pytree,
             "fault injection / payload sentinels act on the packed sketch "
             "uplink (fed.faults / fed.robust); the uncompressed FedOPT "
             "baseline has no sketch payload -- run them on the SAFL/SACFL "
+            "rounds")
+    if codec is not None:
+        raise ValueError(
+            "the payload codec quantizes the packed sketch uplink "
+            "(fed.codec, DESIGN.md §13); the uncompressed FedOPT baseline "
+            "has no sketch payload -- run the codec on the SAFL/SACFL "
             "rounds")
     eta = jnp.asarray(cfg.client_lr * eta_scale, jnp.float32)
 

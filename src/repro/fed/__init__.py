@@ -1,11 +1,15 @@
 """Client participation + robustness subsystem: partial participation,
-async staleness buffers, sampling policies, deterministic fault injection
-and sketch-space payload sentinels for the on-device scan driver
-(DESIGN.md §7, §10).
+async staleness buffers, sampling policies, deterministic fault injection,
+sketch-space payload sentinels, and the quantized payload codec
+(``codec``: int8 / 1-bit stochastic rounding with sketch-space error
+feedback and measured ``uplink_bits``) for the on-device scan driver
+(DESIGN.md §7, §10, §13).
 """
 
 from repro.fed.async_buffer import (AsyncConfig, arrival_weight,
                                     init_async_state, make_async_round)
+from repro.fed.codec import (CodecConfig, encode_decode, init_codec_state,
+                             measured_uplink_bits)
 from repro.fed.faults import (BYZANTINE, DROP, INF, NAN, OK, FaultConfig,
                               FaultTable, corrupt_payload, fold_arrivals)
 from repro.fed.robust import (SentinelConfig, carry_if_empty,

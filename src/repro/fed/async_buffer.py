@@ -135,22 +135,31 @@ def _split_cfg(cfg) -> tuple[SAFLConfig, ClippedSAFLConfig | None]:
 
 
 def init_async_state(cfg, acfg: AsyncConfig, params: Pytree,
-                     plan: PackingPlan, num_clients: int) -> dict:
+                     plan: PackingPlan, num_clients: int,
+                     codec=None) -> dict:
     """Server opt state + the staleness ring buffer (scan-carry resident).
 
     ``buf[g % D]`` holds generation g's per-client sketch payloads
     ``(G, b_total)`` for the D most recent generations; ``bufw`` the
     matching participation weights (0 for unsampled clients).  ``cfg`` is a
-    ``SAFLConfig`` or (for SACFL) a ``ClippedSAFLConfig``."""
+    ``SAFLConfig`` or (for SACFL) a ``ClippedSAFLConfig``.  ``codec`` (a
+    ``fed.codec.CodecConfig`` with ``error_feedback``) adds the per-client
+    sketch-space EF memory under ``"ef"`` -- pass the same codec to
+    ``make_async_round``."""
     base, _ = _split_cfg(cfg)
     D = acfg.buffer_rounds
-    return {"opt": init_opt_state(base.server, params),
-            "buf": jnp.zeros((D, num_clients, plan.b_total), jnp.float32),
-            "bufw": jnp.zeros((D, num_clients), jnp.float32)}
+    state = {"opt": init_opt_state(base.server, params),
+             "buf": jnp.zeros((D, num_clients, plan.b_total), jnp.float32),
+             "bufw": jnp.zeros((D, num_clients), jnp.float32)}
+    from repro.fed.codec import init_codec_state
+    ef = init_codec_state(codec, num_clients, plan.b_total)
+    if ef is not None:
+        state["ef"] = ef
+    return state
 
 
 def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
-                     plan: PackingPlan, microbatch=None):
+                     plan: PackingPlan, microbatch=None, codec=None):
     """Build the async round function for the driver's ``buffer=`` hook.
 
     ``cfg`` is a ``SAFLConfig``, or a ``ClippedSAFLConfig`` to run the
@@ -164,6 +173,16 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
     ``None`` / >= G keeps the materialized path (and its bitwise pins)
     untouched.  The driver threads the knob via ``functools.partial``
     (``run_scan(..., microbatch=)``), which binds it to this fn's keyword.
+
+    ``codec`` (static ``fed.codec.CodecConfig``, DESIGN.md §13) quantizes
+    each generation's payload rows BEFORE the sentinel vetting and the ring
+    push, so the buffer stores QUANTIZED (decoded) generations and every
+    later pop re-emits exactly what crossed the wire.  With
+    ``codec.error_feedback`` the state carries the per-client EF memory
+    under ``"ef"`` (``init_async_state(..., codec=)``); unsampled clients
+    freeze theirs, while fault-dropped / sentinel-rejected clients still
+    update it (the loss happened in transit, after encoding).  A codec
+    round reports the MEASURED ``uplink_bits``.
 
     Signature of the returned fn (driver-compatible plus the buffer kwargs
     the hook supplies):
@@ -227,6 +246,23 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
             _, (sks_c, losses_c) = jax.lax.scan(sk_chunk, 0, bc)
             sks = sks_c.reshape(n_mb * mbv, -1)[:G]
             losses = losses_c.reshape(-1)[:G]
+        # -- codec (DESIGN.md §13): quantize + EF on the full staged
+        # (G, b_total) payload, before vetting and before the push -- the
+        # ring stores quantized generations.  Staging happens after the
+        # streamed fold here, so both mbv branches share this stage (and
+        # trivially agree).  Unsampled clients (pre-guard mask 0) freeze
+        # their EF memory; guard drops/rejections happen in transit AFTER
+        # encoding, so those clients still update theirs. --
+        new_ef = None
+        if codec is not None:
+            from repro.fed.codec import encode_decode
+            if "ef" in state:
+                dec, ef_upd = encode_decode(codec, round_key, sks,
+                                            ef_rows=state["ef"])
+                new_ef = jnp.where((mask > 0)[:, None], ef_upd, state["ef"])
+            else:
+                dec, _ = encode_decode(codec, round_key, sks)
+            sks = dec
         counters = {}
         if fault_spec is not None or sentinel is not None:
             from repro.fed.robust import guard_uplink
@@ -282,6 +318,16 @@ def make_async_round(cfg, loss_fn: LossFn, acfg: AsyncConfig,
             counters = {**counters,
                         "diverged": divergence_flag(sentinel, loss)}
         metrics = {"loss": loss, "arrival_weight": W, **counters}
-        return new_params, {"opt": opt, "buf": buf, "bufw": bufw}, metrics
+        if codec is not None:
+            from repro.fed.codec import measured_uplink_bits
+            metrics["uplink_bits"] = measured_uplink_bits(
+                codec, plan.b_total, eff_mask=mask)
+        new_state = {"opt": opt, "buf": buf, "bufw": bufw}
+        if new_ef is not None:
+            # deliberately outside the sentinel no-arrival select above:
+            # EF tracks what each client TRANSMITTED this round, and a
+            # no-arrival round still transmitted (the ring holds it)
+            new_state["ef"] = new_ef
+        return new_params, new_state, metrics
 
     return round_fn

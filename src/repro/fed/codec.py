@@ -1,0 +1,172 @@
+"""Quantized sketch payload codec: real bits on the wire (DESIGN.md §13).
+
+Until this module, ``uplink_bits`` was an accounting fiction: every payload
+crossing the (simulated) wire was float32.  The paper's abstract pairs
+sketching WITH quantization as the route to both fewer rounds and fewer
+per-round bits, and the 1-bit Adam line of work shows adaptive servers
+tolerate aggressive payload quantization when paired with error feedback.
+Sketch space is the natural place for that stage: every uplink is already a
+row of the packed ``(G, b_total)`` payload, so one quantizer covers every
+model, and quantization error feeds back in b dims, not d.
+
+The codec sits between the fused sketch and the collective:
+
+    delta --sk--> (b_total,) row --[+EF]--> quantize --> dequantize
+          --> faults/sentinels/mask --> the ONE masked mean / psum
+
+* **int8** (``bits=8``): per-row scale ``s = max|row| / 127``, stochastic
+  rounding ``q = clip(floor(row/s + u), -127, 127)`` with ``u ~ U[0,1)``,
+  decode ``q * s``.  Conditionally unbiased given the row.
+* **1-bit** (``bits=1``): per-row scale ``s = max|row|``, sign drawn with
+  ``P(+s) = (row/s + 1)/2``, decode ``±s``.  Also conditionally unbiased.
+* **Error feedback** (``error_feedback=True``): the residual
+  ``e' = (x + e) - Q(x + e)`` is carried per client in sketch space --
+  ``(G, b_total)``, living in the scan carry next to the server moments --
+  and added before the next round's quantization, so the compression error
+  is re-transmitted instead of lost.  Under partial participation an
+  unsampled client's memory is frozen (it did not compute this round),
+  mirroring the top-k EF baseline's semantics.
+
+**Simulation style**: the payload stays a float32 array HOLDING exactly the
+values an int{bits}-plus-f32-scale wire format would reconstruct
+(quantize-dequantize in graph); the measured wire size is computed
+statically (``CodecConfig.payload_bits``).  Downstream consumers -- faults,
+sentinels, the masked mean -- therefore operate on DECODED rows, which is
+the honest order: corruption happens in transit to the encoded bytes, and
+the server can only vet what it decodes.
+
+**RNG determinism**: the rounding uniforms are a pure function of
+``(round_key, codec.seed, global client index)`` via a dedicated fold_in
+stream tag, so the streamed ``microbatch=`` fold draws the SAME uniforms
+for client c as the materialized path (chunk-split invariance, the
+DESIGN.md §12 contract), and scan/host-loop/resume trajectories agree.
+
+**Program families** (DESIGN.md appendix "Pinning methodology"):
+``codec=None`` routes at Python level and keeps every existing pinned
+trajectory byte-identical; an enabled codec is its own program family
+(quantization changes the trajectory by design).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# decorrelates the rounding-uniform stream from the data sampler, fault
+# (104729) and delay (7919) fold_in chains -- a distinct prime tag
+_CODEC_STREAM_TAG = 15485863
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecConfig:
+    """Static payload-codec configuration (binds like ``plan=``/
+    ``sentinel=`` via ``functools.partial``, never as a traced kwarg).
+
+    ``bits`` is the mantissa width per payload coordinate: 8 (int8) or 1
+    (sign).  ``error_feedback`` carries the per-client quantization
+    residual in sketch space across rounds (callers then wrap the server
+    state as ``{"opt": ..., "ef": (G, b_total)}``, see
+    ``init_codec_state``).  ``seed`` decorrelates the rounding uniforms
+    from every other stream."""
+    bits: int = 8
+    error_feedback: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.bits in (1, 8), f"bits must be 1 or 8, got {self.bits}"
+
+    def payload_bits(self, b_total: int) -> int:
+        """MEASURED uplink bits of ONE encoded payload row: ``bits`` per
+        coordinate plus one float32 per-row scale factor.  This is what a
+        codec round reports as ``uplink_bits`` (x the effective post-guard
+        cohort) in place of the float32 fiction."""
+        return int(b_total) * self.bits + 32
+
+
+def init_codec_state(codec: CodecConfig | None, num_clients: int,
+                     b_total: int):
+    """The ``(G, b_total)`` sketch-space error-feedback memory (zeros), or
+    ``None`` when the codec is off / EF-less (callers then keep the bare
+    opt state unwrapped)."""
+    if codec is None or not codec.error_feedback:
+        return None
+    return jnp.zeros((num_clients, b_total), jnp.float32)
+
+
+def _row_key(codec: CodecConfig, round_key: jax.Array,
+             client_id: jax.Array) -> jax.Array:
+    k = jax.random.fold_in(round_key, _CODEC_STREAM_TAG)
+    k = jax.random.fold_in(k, codec.seed)
+    return jax.random.fold_in(k, client_id)
+
+
+def _quantize_row(codec: CodecConfig, key: jax.Array,
+                  row: jax.Array) -> jax.Array:
+    """Quantize-dequantize ONE (b,) row with stochastic rounding.
+
+    All-zero rows have scale 0 and decode to exactly 0 (the guards below
+    keep 0/0 out of the graph), so a zero-padded streamed tail chunk stays
+    exactly zero through the codec."""
+    u = jax.random.uniform(key, row.shape, jnp.float32)
+    if codec.bits == 1:
+        s = jnp.max(jnp.abs(row))
+        p = jnp.where(s > 0, (row / jnp.where(s > 0, s, 1.0) + 1.0) * 0.5,
+                      0.5)
+        return jnp.where(u < p, 1.0, -1.0) * s
+    L = float(2 ** (codec.bits - 1) - 1)                   # 127 for int8
+    s = jnp.max(jnp.abs(row)) / L
+    scaled = jnp.where(s > 0, row / jnp.where(s > 0, s, 1.0), 0.0)
+    q = jnp.clip(jnp.floor(scaled + u), -L, L)
+    return q * s
+
+
+def quantize_rows(codec: CodecConfig, round_key: jax.Array, rows: jax.Array,
+                  client_ids: jax.Array) -> jax.Array:
+    """Quantize-dequantize ``(n, b)`` payload rows; ``client_ids`` are the
+    GLOBAL client indices of the rows (so streamed chunks draw the same
+    per-client uniforms as the materialized cohort)."""
+    return jax.vmap(
+        lambda r, c: _quantize_row(codec, _row_key(codec, round_key, c), r)
+    )(rows, client_ids)
+
+
+def encode_decode(codec: CodecConfig, round_key: jax.Array, rows: jax.Array,
+                  ef_rows=None, client_ids=None):
+    """The full per-round codec stage on ``(n, b)`` payload rows.
+
+    EF residual is added BEFORE quantization and subtracted after
+    (``e' = x + e - Q(x + e)``); the decoded rows that go to the server are
+    ``Q(x + e)``, so sketch linearity (the streamed-fold argument of
+    DESIGN.md §12) still holds per chunk -- the fold sums decoded rows,
+    and the sum of decoded rows IS the decoded cohort payload.
+
+    Returns ``(decoded_rows, new_ef_rows)``; ``new_ef_rows`` is ``None``
+    when ``ef_rows`` is (the EF-less codec carries no memory)."""
+    if client_ids is None:
+        client_ids = jnp.arange(rows.shape[0], dtype=jnp.int32)
+    x = rows if ef_rows is None else rows + ef_rows
+    dec = quantize_rows(codec, round_key, x, client_ids)
+    new_ef = (x - dec) if ef_rows is not None else None
+    return dec, new_ef
+
+
+def transmitting_clients(mask) -> jax.Array:
+    """Count of clients whose payload is actually billed: strictly-positive
+    weight in the EFFECTIVE (post-guard) mask -- the sampled cohort minus
+    fault drops and sentinel rejections, the same convention
+    ``launch.driver._with_bits`` bills for uncoded rounds."""
+    from repro.core.safl import mask_weights
+    return jnp.sum((mask_weights(mask) > 0).astype(jnp.float32))
+
+
+def measured_uplink_bits(codec: CodecConfig, b_total: int,
+                         eff_mask=None, num_clients=None) -> jax.Array:
+    """Per-round MEASURED uplink bits under the codec: encoded row size x
+    the effective transmitting cohort (``eff_mask`` post-guard; ``None``
+    bills the full ``num_clients`` cohort)."""
+    per_client = jnp.float32(codec.payload_bits(b_total))
+    if eff_mask is None:
+        return per_client * jnp.float32(num_clients)
+    return per_client * transmitting_clients(eff_mask)

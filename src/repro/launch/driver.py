@@ -141,7 +141,8 @@ _round_kwargs = round_hook_kwargs         # back-compat alias
 def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
                   kwargs_fn=None, bits_per_round: Optional[int] = None,
                   donate: bool = True, participation=None,
-                  buffer: bool = False, faults=None, microbatch=None):
+                  buffer: bool = False, faults=None, microbatch=None,
+                  codec=None):
     """Jit one scanned chunk of ``num_rounds`` rounds.
 
     Signature of the returned fn:
@@ -150,11 +151,14 @@ def make_chunk_fn(round_fn: RoundFn, sampler, num_rounds: int, *,
     ``t0`` is a traced scalar so successive chunks reuse one executable.
     ``participation``/``buffer``/``faults`` are the repro.fed hooks (module
     docstring).  ``microbatch`` (static) binds the streamed-aggregation
-    chunk size into the round fn (DESIGN.md §12); None leaves the round --
-    and the pinned programs -- untouched.
+    chunk size into the round fn (DESIGN.md §12); ``codec`` (static
+    ``fed.codec.CodecConfig``) binds the payload codec (DESIGN.md §13).
+    None leaves the round -- and the pinned programs -- untouched.
     """
     if microbatch is not None:
         round_fn = functools.partial(round_fn, microbatch=microbatch)
+    if codec is not None:
+        round_fn = functools.partial(round_fn, codec=codec)
     n_fault_clients = getattr(faults, "num_clients", None)
 
     def chunk(params, state, data_state, key, t0):
@@ -182,7 +186,8 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
              kwargs_fn=None, bits_per_round: Optional[int] = None,
              donate: bool = True, on_chunk=None, participation=None,
              buffer: bool = False, faults=None, microbatch=None,
-             start_round: int = 0, stream=None) -> tuple[Pytree, dict, dict]:
+             codec=None, start_round: int = 0,
+             stream=None) -> tuple[Pytree, dict, dict]:
     """Run ``rounds`` federated rounds on device in scanned chunks.
 
     * ``sampler`` provides ``init_state()`` and ``sample(state, t)`` (see
@@ -192,13 +197,43 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     * ``chunk_size`` bounds rounds per dispatch (0 = all in one); metrics are
       fetched to host once per chunk, and ``on_chunk(t_done, params, state,
       chunk_hist)`` runs between chunks (logging / checkpointing).
-    * ``participation``/``buffer`` are the repro.fed hooks (module
-      docstring): the cohort mask is a pure function of the absolute round
-      index, so chunk splits leave trajectories bit-identical.
-    * ``microbatch`` (static int) streams the round's aggregation over
+
+    **Hook contract** (the full set, with each hook's pin class -- see
+    DESIGN.md appendix "Pinning methodology" for the taxonomy):
+
+    * ``participation=`` (policy object, ``repro.fed.participation``): the
+      cohort mask is evaluated in the scan body as a pure function of the
+      absolute round index and passed to the round as ``part_mask``.
+      ``None`` routes at Python level (bitwise-neutral); an all-ones 0/1
+      mask is bitwise the unmasked path by construction.
+    * ``buffer=True`` (``repro.fed.async_buffer``): threads the traced
+      round index ``t`` and the run's base key into the round.  The async
+      round with ``delay="zero"`` is bitwise the synchronous program;
+      nonzero delays are their own program family.
+    * ``faults=`` (policy, ``repro.fed.faults``): per-round traced fault
+      spec passed as ``fault_spec``; ``None`` is bitwise-neutral, enabled
+      faults are their own family (extra guard counters in the scan ys).
+    * ``sentinel=`` / ``telemetry=`` / ``plan=``: static configs, NOT
+      threaded here -- bind them into ``round_fn`` via
+      ``functools.partial`` before calling.  ``sentinel`` and ``telemetry``
+      each start their own program family when enabled (extra scan
+      outputs shift XLA fusion); ``None`` is bitwise-neutral.
+    * ``microbatch=`` (static int): streams the round's aggregation over
       chunks of that many clients (DESIGN.md §12: peak payload memory
       O(microbatch x b_total) instead of O(G x b_total)); ``None`` (default)
-      and any value >= G keep the materialized round program untouched.
+      and any value >= G keep the materialized round program untouched
+      (bitwise); a streaming value is its own family, allclose to the
+      materialized path.
+    * ``codec=`` (static ``fed.codec.CodecConfig``): binds the quantized
+      payload codec (DESIGN.md §13) into the round like ``microbatch``;
+      ``None`` (default) is bitwise-neutral, an enabled codec is its own
+      family (it changes the trajectory by design) and replaces the
+      ``uplink_bits`` fiction with the measured encoded size.  With
+      ``codec.error_feedback`` the caller wraps ``state`` as
+      ``{"opt": ..., "ef": ...}`` (``fed.codec.init_codec_state``).
+    * ``stream=`` (below) only changes where metrics land, never the
+      compiled round program.
+
     * ``start_round`` resumes mid-trajectory at an absolute round index --
       the restart path for a ``(t, key)`` checkpoint cursor
       (examples/train_lm.py).  Because every per-round stream (data,
@@ -236,7 +271,7 @@ def run_scan(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
                 round_fn, sampler, n, kwargs_fn=kwargs_fn,
                 bits_per_round=bits_per_round, donate=donate,
                 participation=participation, buffer=buffer, faults=faults,
-                microbatch=microbatch)
+                microbatch=microbatch, codec=codec)
         t_wall = time.perf_counter()
         params, state, data_state, hist = compiled[n](
             params, state, data_state, key, jnp.asarray(t, jnp.int32))
@@ -262,7 +297,7 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
                   rounds: int, key: jax.Array, kwargs_fn=None,
                   bits_per_round: Optional[int] = None, donate: bool = True,
                   participation=None, buffer: bool = False, faults=None,
-                  microbatch=None,
+                  microbatch=None, codec=None,
                   start_round: int = 0) -> tuple[Pytree, dict, dict]:
     """One-dispatch-per-round reference loop with the scan driver's exact
     key/batch sequence (fold_in(key, t); device-side sampling), including
@@ -275,6 +310,8 @@ def run_host_loop(round_fn: RoundFn, sampler, params: Pytree, state: dict, *,
     """
     if microbatch is not None:
         round_fn = functools.partial(round_fn, microbatch=microbatch)
+    if codec is not None:
+        round_fn = functools.partial(round_fn, codec=codec)
     n_fault_clients = getattr(faults, "num_clients", None)
     data_state = sampler.init_state()
     sample = jax.jit(sampler.sample)

@@ -1,5 +1,16 @@
 """Batched greedy serving driver over the decode path (CPU-runnable).
 
+Loads a named architecture from ``repro.configs`` (``--smoke`` shrinks it
+to laptop scale while keeping the exact layer stack), initializes the
+ring-buffered KV cache, optionally runs the audio encoder pass for
+encoder-decoder configs (``encode_for_decode`` primes the cross-attention
+cache), then greedy-decodes ``--batch`` sequences for ``--steps`` tokens
+through one jitted ``decode_step`` and reports tokens/sec.  This is the
+inference-side counterpart of the training drivers: the same model code
+the federated rounds train is what serves, so a config or cache-layout
+change that breaks decoding fails here (and in the CI dry-run) rather
+than in a downstream consumer.
+
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke
 """
 from __future__ import annotations

@@ -184,7 +184,8 @@ def _sketch_avg_desk_local(skcfg: SketchConfig, client_axes, deltas, key,
 
 
 def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
-                                  key, w_loc=None, den=None, mb=None):
+                                  key, w_loc=None, den=None, mb=None,
+                                  codec=None, ax_sizes=()):
     """Plan-routed shard-local sketch, PER DEVICE inside shard_map.
 
     The static layout (``plan``, built once OUTSIDE the trace from the
@@ -207,8 +208,28 @@ def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
     (b_total,) partial sum + its scalar weight over the client axes
     (sketch linearity / mergeability, Property 1) before the single desk.
     A non-dividing tail chunk is zero-padded with zero weight, which is
-    exact under the weighted sum."""
+    exact under the weighted sum.
+
+    ``codec`` (static ``fed.codec.CodecConfig``, DESIGN.md §13) quantizes
+    the shard-local weighted sketch-sum -- ONE (b_total,) row per client
+    shard -- immediately before the single psum, so what the collective
+    moves is the encoded payload.  Quantize-before-reduce is a deliberate
+    bias trade (documented in §13): the per-shard quantizers are
+    conditionally unbiased, but the server mean of quantized partial sums
+    is not the quantization of the mean; the codec path is its own program
+    family either way.  The rounding uniforms key off the FLAT SHARD INDEX
+    (``ax_sizes`` aligns with ``client_axes``), so each shard draws an
+    independent, reproducible stream."""
     rp = derive_round_params(plan, key)
+    if codec is not None:
+        from repro.fed.codec import encode_decode
+        cid = jnp.int32(0)
+        for ax, n in zip(client_axes, ax_sizes):
+            cid = cid * n + jax.lax.axis_index(ax)
+
+        def _enc(S):
+            return encode_decode(codec, key, S[None],
+                                 client_ids=cid[None])[0][0]
     if mb is not None:
         g_loc = jax.tree_util.tree_leaves(deltas)[0].shape[0]
         w = jnp.ones((g_loc,), jnp.float32) if w_loc is None else \
@@ -226,6 +247,8 @@ def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
         S0 = jnp.zeros((plan.b_total,), jnp.float32)
         (S, W), _ = jax.lax.scan(fold, (S0, jnp.float32(0.0)),
                                  {"d": dc, "w": wc})
+        if codec is not None:   # encode what the collective moves (§13)
+            S = _enc(S)
         if client_axes:
             S = jax.lax.psum(S, client_axes)
             W = jax.lax.psum(W, client_axes)
@@ -237,6 +260,24 @@ def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
         return jax.tree.map(lambda x: x[None], out)  # (1, ...): cohort mean
     flat = jax.vmap(lambda t: pack_tree(plan, t))(deltas)   # (G_loc, d_loc)
     s = jax.vmap(lambda f: sk_flat(plan, rp, f))(flat)      # (G_loc, b_tot)
+    if codec is not None:
+        # codec family: weighted-local-sum -> quantize -> the ONE psum;
+        # same restructure the mb fold uses, so both branches encode the
+        # identical (b_total,) partial sum per shard
+        g_loc = s.shape[0]
+        w = (jnp.ones((g_loc,), jnp.float32) if w_loc is None
+             else w_loc.astype(jnp.float32))
+        S = jnp.sum(s.astype(jnp.float32) * w[:, None], axis=0)
+        W = jnp.sum(w)
+        S = _enc(S)
+        if client_axes:
+            S = jax.lax.psum(S, client_axes)
+            W = jax.lax.psum(W, client_axes)
+        denom = jnp.float32(den) if den is not None else \
+            jnp.maximum(W, jnp.float32(1.0))
+        u = desk_flat(plan, rp, S / denom)
+        out = unpack_tree(plan, u, cast=False)
+        return jax.tree.map(lambda x: x[None], out)  # (1, ...): cohort mean
     s = _collect(s, client_axes, w_loc, den)   # <-- compressed uplink
     u = jax.vmap(lambda p: desk_flat(plan, rp, p))(s)
     return jax.vmap(lambda f: unpack_tree(plan, f, cast=False))(u)
@@ -244,7 +285,7 @@ def _sketch_avg_desk_local_packed(plan: PackingPlan, client_axes, deltas,
 
 def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
                             topology: str = "cross_device", plan=None,
-                            part_mask=None, microbatch=None):
+                            part_mask=None, microbatch=None, codec=None):
     """Sketch each client delta (shard-local), cohort-mean over client axes,
     desketch.
 
@@ -273,7 +314,14 @@ def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
     partial sum plus a scalar weight.  Requires the packed ``plan``.
     ``None`` or >= the shard-local cohort keeps the materialized path
     bitwise untouched; the streamed fold is its own program family, equal
-    to the materialized one up to float summation order."""
+    to the materialized one up to float summation order.
+
+    ``codec`` (static ``fed.codec.CodecConfig``) quantizes each shard's
+    weighted sketch-sum before the one psum (DESIGN.md §13; requires the
+    packed ``plan``; per-client error feedback does not exist at shard
+    granularity, so ``codec.error_feedback`` raises -- pass
+    ``CodecConfig(..., error_feedback=False)``).  ``codec=None`` routes at
+    Python level, keeping the pinned programs byte-identical."""
     client_axes = client_axes_of(mesh, topology)
     lead = client_axes if client_axes else None
     in_specs = jax.tree.map(
@@ -291,11 +339,25 @@ def sharded_sketch_avg_desk(mesh, skcfg: SketchConfig, pspecs, deltas, key,
                 "one with make_sharded_packing_plan (per-leaf reference "
                 "path folds the client axis leaf-by-leaf and cannot "
                 "stream)")
+    if codec is not None:
+        if plan is None:
+            raise ValueError(
+                "the mesh payload codec needs the packed plan route; build "
+                "one with make_sharded_packing_plan")
+        if codec.error_feedback:
+            raise ValueError(
+                "the mesh uplink quantizes SHARD-LOCAL partial sums; "
+                "per-client error feedback does not exist at that "
+                "granularity -- use CodecConfig(..., error_feedback=False)")
     if plan is not None:
         fn = functools.partial(_sketch_avg_desk_local_packed, plan,
                                client_axes)
         if mb is not None:
             fn = functools.partial(fn, mb=mb)
+        if codec is not None:
+            fn = functools.partial(
+                fn, codec=codec,
+                ax_sizes=tuple(mesh.shape[ax] for ax in client_axes))
     else:
         fn = functools.partial(_sketch_avg_desk_local, skcfg, client_axes)
 
@@ -695,7 +757,7 @@ def sharded_sketch_buffered(mesh, acfg, plan: PackingPlan, pspecs, deltas,
 def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                      topology: str = "cross_device", *, participation=None,
                      buffer=None, faults=None, sentinel=None,
-                     telemetry=None, microbatch=None):
+                     telemetry=None, microbatch=None, codec=None):
     """The typed-key SAFL mesh round:
     ``core(params, state, batch, round_key, **hook_kwargs) ->
     (params, state, loss_or_metrics)``.
@@ -731,10 +793,43 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
     fault/sentinel guard need the materialized per-client payload rows, and
     telemetry probes read the materialized delta tree, so combining them
     raises.  ``None`` / >= the shard-local cohort is the materialized path,
-    bitwise-pinned."""
+    bitwise-pinned.
+
+    ``codec`` (static ``fed.codec.CodecConfig``, DESIGN.md §13) quantizes
+    each shard's sketch partial-sum before the one psum -- plain sketched
+    cores only (buffer/faults/sentinel operate on per-client payload rows
+    that the shard-sum codec never sees; telemetry probes are computed
+    from unquantized deltas; fedopt has no sketch payload), and only
+    without per-client error feedback (shard granularity).  A codec core
+    returns a metrics dict whose ``uplink_bits`` is the MEASURED encoded
+    size: one payload row per client shard crossing the collective."""
     abstract, pspecs, plan = _mesh_plan(model_cfg, safl_cfg, mesh, topology)
     G = num_clients_of(mesh, topology)
     guarded = faults is not None or sentinel is not None
+    if codec is not None:
+        if buffer is not None or guarded:
+            raise NotImplementedError(
+                "the mesh payload codec quantizes shard-local partial "
+                "sums; the staleness buffer and the fault/sentinel guard "
+                "operate on materialized per-client payload rows -- run "
+                "those hooks without codec=")
+        if telemetry is not None:
+            raise ValueError(
+                "telemetry probes read the unquantized delta tree; drop "
+                "telemetry= or codec=")
+        if safl_cfg.sketch.kind == "none":
+            raise ValueError(
+                "the payload codec quantizes the packed sketch uplink; "
+                "fedopt (sketch.kind='none') has no sketch payload")
+        if plan is None:
+            raise ValueError(
+                "the mesh payload codec needs the packed plan route "
+                "(every local shard <= SKETCH_CHUNK_NUMEL)")
+        if codec.error_feedback:
+            raise ValueError(
+                "the mesh uplink quantizes SHARD-LOCAL partial sums; "
+                "per-client error feedback does not exist at that "
+                "granularity -- use CodecConfig(..., error_feedback=False)")
     if microbatch is not None:
         resolve_microbatch(microbatch, G)   # reject mb <= 0 at build time
         if buffer is not None or guarded:
@@ -860,10 +955,22 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
         else:
             update = sharded_sketch_avg_desk(
                 mesh, safl_cfg.sketch, pspecs, deltas, key, topology,
-                plan=plan, part_mask=part_mask, microbatch=microbatch)
+                plan=plan, part_mask=part_mask, microbatch=microbatch,
+                codec=codec)
         params, state = apply_update(safl_cfg.server, state, params, update)
         loss = (jnp.mean(losses) if part_mask is None
                 else masked_mean(losses, part_mask))
+        if codec is not None:
+            # measured wire size: one encoded (b_total,) partial-sum row
+            # per client shard crosses the collective (a static count --
+            # masked-out clients still contribute their zeroed rows to the
+            # shard sum, so every shard transmits)
+            n_shards = 1
+            for ax in client_axes_of(mesh, topology):
+                n_shards *= mesh.shape[ax]
+            m = {"loss": loss, "uplink_bits": jnp.float32(
+                codec.payload_bits(plan.b_total) * n_shards)}
+            return params, state, m
         return params, state, _tel(loss, update=update, st=state,
                                    mask=part_mask)
 
@@ -873,7 +980,8 @@ def _make_round_core(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
 def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                          topology: str = "cross_device", *,
                          participation=None, buffer=None, faults=None,
-                         sentinel=None, telemetry=None, microbatch=None):
+                         sentinel=None, telemetry=None, microbatch=None,
+                         codec=None):
     """SAFL round on the mesh.  batch leaves: (G, K, mb, ...) with G = number
     of FL clients (data-parallel groups or pods, per ``topology``).
 
@@ -891,7 +999,7 @@ def make_safl_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                                     participation=participation,
                                     buffer=buffer, faults=faults,
                                     sentinel=sentinel, telemetry=telemetry,
-                                    microbatch=microbatch)
+                                    microbatch=microbatch, codec=codec)
     hooked = (participation is not None or buffer is not None
               or faults is not None or sentinel is not None)
     if not hooked:
@@ -920,13 +1028,14 @@ def _fedopt_cfg(safl_cfg: SAFLConfig) -> SAFLConfig:
 def make_fedopt_train_step(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                            topology: str = "cross_device", *,
                            participation=None, buffer=None, faults=None,
-                           sentinel=None, telemetry=None, microbatch=None):
+                           sentinel=None, telemetry=None, microbatch=None,
+                           codec=None):
     """Uncompressed FedOPT baseline: raw-delta mean = O(d) all-reduce."""
     return make_safl_train_step(model_cfg, _fedopt_cfg(safl_cfg), mesh,
                                 topology, participation=participation,
                                 buffer=buffer, faults=faults,
                                 sentinel=sentinel, telemetry=telemetry,
-                                microbatch=microbatch)
+                                microbatch=microbatch, codec=codec)
 
 
 # ---------------------------------------------------------------------------
@@ -951,7 +1060,8 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                       topology: str = "cross_device", *, sampler,
                       num_rounds: int, donate: bool = True,
                       participation=None, buffer=None, faults=None,
-                      sentinel=None, telemetry=None, microbatch=None):
+                      sentinel=None, telemetry=None, microbatch=None,
+                      codec=None):
     """Jit ``num_rounds`` SAFL mesh rounds as ONE ``lax.scan`` dispatch.
 
     The scan sits OUTSIDE the shard_map round: each scanned step draws its
@@ -987,7 +1097,7 @@ def make_safl_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                                     participation=participation,
                                     buffer=buffer, faults=faults,
                                     sentinel=sentinel, telemetry=telemetry,
-                                    microbatch=microbatch)
+                                    microbatch=microbatch, codec=codec)
 
     def chunk(params, opt_state, data_state, key_data, t0):
         def body(carry, t):
@@ -1016,7 +1126,8 @@ def make_fedopt_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                         topology: str = "cross_device", *, sampler,
                         num_rounds: int, donate: bool = True,
                         participation=None, buffer=None, faults=None,
-                        sentinel=None, telemetry=None, microbatch=None):
+                        sentinel=None, telemetry=None, microbatch=None,
+                        codec=None):
     """Scanned uncompressed FedOPT mesh rounds (``sketch.kind == "none"``:
     the raw-delta O(d) all-reduce inside the same scan layout)."""
     return make_safl_scan_fn(model_cfg, _fedopt_cfg(safl_cfg), mesh,
@@ -1024,7 +1135,8 @@ def make_fedopt_scan_fn(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh,
                              num_rounds=num_rounds, donate=donate,
                              participation=participation, buffer=buffer,
                              faults=faults, sentinel=sentinel,
-                             telemetry=telemetry, microbatch=microbatch)
+                             telemetry=telemetry, microbatch=microbatch,
+                             codec=codec)
 
 
 def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
@@ -1033,7 +1145,7 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
                   start_round: int = 0, donate: bool = True, on_chunk=None,
                   participation=None, buffer=None, faults=None,
                   sentinel=None, telemetry=None, stream=None,
-                  microbatch=None):
+                  microbatch=None, codec=None):
     """Run ``rounds`` mesh rounds in scanned chunks (the multi-pod analogue
     of ``launch.driver.run_scan``).
 
@@ -1044,29 +1156,44 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
     data, cohorts, delays, sketch operators -- is a pure function of the
     absolute round index under ``key``).
 
-    ``participation``/``buffer`` are the repro.fed hooks (DESIGN §9):
-    ``participation`` is a sampling policy whose per-round cohort mask is
-    evaluated in the scan body; ``buffer`` is an
-    ``fed.async_buffer.AsyncConfig``, in which case ``opt_state`` must be
-    the ``init_mesh_async_state`` dict (the staleness ring rides the
-    donated scan carry).  An all-ones mask / delay=0 buffer reproduce the
-    hookless trajectories bitwise (tests/test_mesh_scan.py).  ``faults``/
-    ``sentinel`` are the fault-injection / payload-sentinel hooks
-    (DESIGN.md §10); their history carries ``n_dropped``/``n_rejected``/
-    ``diverged`` counters next to the loss, which is what the rollback
-    supervisor (``launch.supervisor``) watches.
+    **Hook contract** (the full set, with each hook's pin class -- see
+    DESIGN.md appendix "Pinning methodology" for the taxonomy):
 
-    ``telemetry`` (static ``repro.obs.Telemetry``) adds the in-graph probe
-    keys to the history; ``stream`` (a ``repro.obs.shards.ShardWriter``)
-    switches to streamed per-chunk JSONL shards + wall-time span events and
-    skips the in-memory accumulation, exactly as in
-    ``launch.driver.run_scan`` (the returned ``history`` is then ``{}``).
-
-    ``microbatch`` (static int) streams each shard's sketch stage over
-    chunks of that many client rows (DESIGN §12; plain sketched cores
-    only -- combining with buffer/faults/sentinel/telemetry raises).
-    ``None`` or >= the shard-local cohort keeps the materialized program
-    bitwise-pinned.
+    * ``participation=`` (sampling policy, DESIGN §9): the per-round cohort
+      mask is evaluated in the scan body and consumed inside the round's
+      sketch shard_map.  ``None`` is bitwise-neutral; an all-ones 0/1 mask
+      reproduces the hookless trajectory bitwise
+      (tests/test_mesh_scan.py).
+    * ``buffer=`` (an ``fed.async_buffer.AsyncConfig``): ``opt_state`` must
+      then be the ``init_mesh_async_state`` dict (the staleness ring rides
+      the donated scan carry).  A delay=0 buffer is bitwise the hookless
+      scan; nonzero delays are their own program family.
+    * ``faults=`` / ``sentinel=`` (DESIGN.md §10): fault-injection /
+      payload-sentinel hooks; their history carries ``n_dropped``/
+      ``n_rejected``/``diverged`` counters next to the loss, which is what
+      the rollback supervisor (``launch.supervisor``) watches.  Disabled
+      (``None``) they are bitwise-neutral; enabled they form their own
+      family (extra scan outputs shift XLA fusion).
+    * ``telemetry=`` (static ``repro.obs.Telemetry``, DESIGN §11): adds the
+      in-graph probe keys to the history; its own family when enabled,
+      bitwise-neutral when ``None``.
+    * ``stream=`` (a ``repro.obs.shards.ShardWriter``): switches to
+      streamed per-chunk JSONL shards + wall-time span events and skips the
+      in-memory accumulation, exactly as in ``launch.driver.run_scan`` (the
+      returned ``history`` is then ``{}``).  Host-side only -- never
+      changes the compiled round program.
+    * ``microbatch=`` (static int, DESIGN §12): streams each shard's sketch
+      stage over chunks of that many client rows (plain sketched cores
+      only -- combining with buffer/faults/sentinel/telemetry raises).
+      ``None`` or >= the shard-local cohort keeps the materialized program
+      bitwise-pinned; a streaming value is its own family, allclose to the
+      materialized path.
+    * ``codec=`` (static ``fed.codec.CodecConfig``, DESIGN.md §13):
+      quantizes each shard's sketch partial-sum before the one psum (plain
+      sketched cores only; requires ``error_feedback=False`` -- per-client
+      EF does not exist at shard granularity).  ``None`` is
+      bitwise-neutral; an enabled codec is its own family and its history
+      reports the MEASURED ``uplink_bits``.
 
     Returns ``(params, opt_state, history)`` with host-side
     ``(rounds - start_round,)`` arrays (key set:
@@ -1088,7 +1215,7 @@ def run_mesh_scan(model_cfg: ModelConfig, safl_cfg: SAFLConfig, mesh, sampler,
                 model_cfg, safl_cfg, mesh, topology, sampler=sampler,
                 num_rounds=n, donate=donate, participation=participation,
                 buffer=buffer, faults=faults, sentinel=sentinel,
-                telemetry=telemetry, microbatch=microbatch)
+                telemetry=telemetry, microbatch=microbatch, codec=codec)
         t_wall = time.perf_counter()
         params, opt_state, data_state, _, hist = compiled[n](
             params, opt_state, data_state, jnp.asarray(kd_host),

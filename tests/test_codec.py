@@ -1,0 +1,319 @@
+"""Quantized payload codec (repro.fed.codec, DESIGN.md §13).
+
+Pins the ISSUE 10 contracts:
+
+  * quantizer properties: stochastic rounding is unbiased (int8 and
+    1-bit), per-element round-trip error is bounded by the row scale,
+    all-zero rows decode to exactly 0 (hypothesis twin below);
+  * ``codec=None`` routes at Python level -- BITWISE vs the codec-free
+    trajectories for safl, clipped safl, and the async buffer under
+    run_scan (pin class 1, DESIGN appendix "Pinning methodology");
+  * error-feedback memory: unsampled clients FREEZE their rows (they
+    computed nothing), sampled clients accumulate the residual -- the
+    codec twin of the PR-3 topk_ef test in test_fed.py;
+  * streamed (``microbatch=``) vs materialized codec rounds agree to
+    float tolerance, including the EF memory (same global-index RNG);
+  * ``uplink_bits`` under a codec is the MEASURED wire size
+    ``(b_total*bits + 32) * n_transmitting``, not the float32 fiction;
+  * rejection matrix: fedopt has no payload to encode; codec +
+    telemetry is refused (EF wraps the opt state the probes read).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaConfig
+from repro.core.clipped import ClippedSAFLConfig, clipped_safl_round
+from repro.core.packed import make_packing_plan
+from repro.core.safl import SAFLConfig, fedopt_round, init_safl, safl_round
+from repro.core.sketch import SketchConfig
+from repro.fed import (AsyncConfig, CodecConfig, encode_decode,
+                       init_async_state, init_codec_state,
+                       make_async_round, measured_uplink_bits)
+from repro.launch.driver import run_scan
+from repro.obs import Telemetry
+
+G = 4
+
+
+class _LinearSampler:
+    """Minimal driver-protocol sampler over a linear regression task."""
+
+    def __init__(self, clients=G, local_steps=2, mb=4):
+        self.shape = (clients, local_steps, mb, 16)
+        self.W = np.asarray(jax.random.normal(jax.random.key(1), (16, 4)))
+
+    def init_state(self):
+        return {"W": jnp.asarray(self.W, jnp.float32)}
+
+    def sample(self, state, t):
+        x = jax.random.normal(jax.random.fold_in(jax.random.key(11), t),
+                              self.shape)
+        return state, {"x": x, "y": x @ state["W"]}
+
+
+def _linear_loss(params, batch):
+    return jnp.mean((batch["x"] @ params["W"] - batch["y"]) ** 2)
+
+
+def _params0():
+    return {"W": jnp.zeros((16, 4))}
+
+
+_SK = SketchConfig(kind="countsketch", ratio=0.25, min_b=8)
+
+
+def _safl_setup(clip=False):
+    base = SAFLConfig(sketch=_SK, server=AdaConfig(name="amsgrad", lr=0.05),
+                      client_lr=0.05, local_steps=2)
+    plan = make_packing_plan(_SK, _params0())
+    if clip:
+        cfg = ClippedSAFLConfig(base=base, clip_tau=0.5)
+        round_fn = functools.partial(clipped_safl_round, cfg, _linear_loss,
+                                     plan=plan)
+    else:
+        cfg = base
+        round_fn = functools.partial(safl_round, cfg, _linear_loss, plan=plan)
+    fresh = lambda: (_params0(), init_safl(base, _params0()))
+    return cfg, plan, round_fn, fresh
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _round_batch(t=0):
+    smp = _LinearSampler()
+    _, batch = smp.sample(smp.init_state(), jnp.asarray(t, jnp.int32))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# quantizer properties
+# ---------------------------------------------------------------------------
+
+_ROWS = jax.random.normal(jax.random.key(3), (G, 24)) * jnp.asarray(
+    [[1.0], [10.0], [0.01], [3.0]])          # heterogeneous row scales
+
+
+@pytest.mark.parametrize("bits", [8, 1])
+def test_roundtrip_error_bounded_by_row_scale(bits):
+    """Per-element |decode - x| <= one quantization step: s = max|row|/127
+    (int8, floor+u moves at most one step) resp. 2*max|row| (1-bit)."""
+    codec = CodecConfig(bits=bits, error_feedback=False)
+    dec, ef = encode_decode(codec, jax.random.key(0), _ROWS)
+    assert ef is None
+    assert bool(jnp.isfinite(dec).all())
+    s = jnp.max(jnp.abs(_ROWS), axis=1, keepdims=True)
+    step = s / 127.0 if bits == 8 else 2.0 * s
+    assert bool((jnp.abs(dec - _ROWS) <= step * (1 + 1e-5)).all())
+    if bits == 1:
+        # decoded values are exactly +-s per row
+        np.testing.assert_allclose(np.abs(np.asarray(dec)),
+                                   np.asarray(s) * np.ones_like(dec),
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 1])
+def test_stochastic_rounding_is_unbiased(bits):
+    """E[decode] == x over the rounding stream: the mean over many round
+    keys converges to the input at the Monte-Carlo rate."""
+    codec = CodecConfig(bits=bits, error_feedback=False)
+    keys = jax.random.split(jax.random.key(7), 2000)
+    dec = jax.vmap(lambda k: encode_decode(codec, k, _ROWS)[0])(keys)
+    err = jnp.abs(jnp.mean(dec, axis=0) - _ROWS)
+    s = jnp.max(jnp.abs(_ROWS), axis=1, keepdims=True)
+    # std-error ~ s/(2*sqrt(N)) for int8, ~ s/sqrt(N) for 1-bit; allow 6x
+    tol = (0.5 if bits == 8 else 1.0) * 6.0 / np.sqrt(2000)
+    assert bool((err <= tol * s).all()), float(jnp.max(err / s))
+
+
+def test_zero_rows_decode_exact_zero():
+    rows = jnp.zeros((3, 16))
+    for bits in (8, 1):
+        dec, _ = encode_decode(CodecConfig(bits=bits, error_feedback=False),
+                               jax.random.key(0), rows)
+        np.testing.assert_array_equal(np.asarray(dec), 0.0)
+
+
+def test_error_feedback_is_the_quantization_residual():
+    codec = CodecConfig(bits=8)
+    ef0 = init_codec_state(codec, G, _ROWS.shape[1])
+    np.testing.assert_array_equal(np.asarray(ef0), 0.0)
+    dec, ef1 = encode_decode(codec, jax.random.key(0), _ROWS, ef_rows=ef0)
+    np.testing.assert_allclose(np.asarray(dec + ef1), np.asarray(_ROWS),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_hypothesis_roundtrip_properties():
+    pytest.importorskip("hypothesis", reason="optional test dep (pip "
+                        "install -e .[test]); suite must still collect")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.floats(min_value=-1e4, max_value=1e4, width=32),
+                    min_size=1, max_size=32),
+           st.sampled_from([8, 1]),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    def prop(vals, bits, seed):
+        rows = jnp.asarray(vals, jnp.float32)[None, :]
+        codec = CodecConfig(bits=bits, error_feedback=False)
+        dec, _ = encode_decode(codec, jax.random.key(seed), rows)
+        assert bool(jnp.isfinite(dec).all())
+        s = jnp.max(jnp.abs(rows))
+        step = s / 127.0 if bits == 8 else 2.0 * s
+        assert bool((jnp.abs(dec - rows) <= step * (1 + 1e-5) + 1e-30).all())
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# codec=None is bitwise (pin class 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["safl", "clipped"])
+def test_codec_none_is_bitwise_under_run_scan(algo):
+    _, _, round_fn, fresh = _safl_setup(clip=algo == "clipped")
+    key = jax.random.key(5)
+    p1, s1, h1 = run_scan(round_fn, _LinearSampler(), *fresh(), rounds=4,
+                          key=key)
+    p2, s2, h2 = run_scan(functools.partial(round_fn, codec=None),
+                          _LinearSampler(), *fresh(), rounds=4, key=key)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(s1, s2)
+
+
+def test_codec_none_async_buffer_is_bitwise():
+    cfg, plan, _, fresh = _safl_setup()
+    acfg = AsyncConfig(max_delay=2, delay="uniform")
+    key = jax.random.key(6)
+
+    def run(codec):
+        rf = make_async_round(cfg, _linear_loss, acfg, plan, codec=codec)
+        p = _params0()
+        s = init_async_state(cfg, acfg, p, plan, G, codec=codec)
+        return run_scan(rf, _LinearSampler(), p, s, rounds=4, key=key,
+                        buffer=True)
+
+    p1, s1, h1 = run(None)
+    p2, s2, h2 = run(None)   # determinism sanity
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    rf_plain = make_async_round(cfg, _linear_loss, acfg, plan)
+    p3, s3, h3 = run_scan(rf_plain, _LinearSampler(), _params0(),
+                          init_async_state(cfg, acfg, _params0(), plan, G),
+                          rounds=4, key=key, buffer=True)
+    np.testing.assert_array_equal(h1["loss"], h3["loss"])
+    _assert_trees_equal(p1, p3)
+    _assert_trees_equal(s1, s3)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback semantics in the round
+# ---------------------------------------------------------------------------
+
+def test_ef_memory_freezes_unsampled_clients():
+    """Codec twin of test_fed.py's topk_ef freeze pin: out-of-cohort
+    clients keep their EF rows untouched, sampled clients accumulate."""
+    cfg, plan, _, fresh = _safl_setup()
+    params, opt = fresh()
+    codec = CodecConfig(bits=8)
+    wrapped = {"opt": opt, "ef": init_codec_state(codec, G, plan.b_total)}
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    _, s2, m = safl_round(cfg, _linear_loss, params, wrapped,
+                          _round_batch(), jax.random.key(0), plan=plan,
+                          part_mask=mask, codec=codec)
+    ef = np.asarray(s2["ef"])
+    np.testing.assert_array_equal(ef[1], 0.0)
+    np.testing.assert_array_equal(ef[3], 0.0)
+    assert np.abs(ef[0]).sum() > 0
+    assert np.abs(ef[2]).sum() > 0
+
+
+def test_streamed_codec_round_matches_materialized():
+    """microbatch=2 folds the same quantized rows (global-index RNG), so
+    params and EF memory agree with the materialized codec round to float
+    tolerance (pin class 3: across the stream/materialize families)."""
+    cfg, plan, _, fresh = _safl_setup()
+    codec = CodecConfig(bits=8)
+
+    def run(mb):
+        params, opt = fresh()
+        wrapped = {"opt": opt, "ef": init_codec_state(codec, G, plan.b_total)}
+        return safl_round(cfg, _linear_loss, params, wrapped,
+                          _round_batch(), jax.random.key(2), plan=plan,
+                          microbatch=mb, codec=codec)
+    p_mat, s_mat, m_mat = run(None)
+    p_str, s_str, m_str = run(2)
+    for a, b in zip(jax.tree.leaves(p_mat), jax.tree.leaves(p_str)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_mat["ef"]),
+                               np.asarray(s_str["ef"]), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(m_mat["uplink_bits"]),
+                                  np.asarray(m_str["uplink_bits"]))
+
+
+# ---------------------------------------------------------------------------
+# measured bits on the wire
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 1])
+def test_uplink_bits_is_measured_wire_size(bits):
+    cfg, plan, _, fresh = _safl_setup()
+    codec = CodecConfig(bits=bits, error_feedback=False)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    _, _, m = safl_round(cfg, _linear_loss, *fresh(), _round_batch(),
+                         jax.random.key(0), plan=plan, part_mask=mask,
+                         codec=codec)
+    want = (plan.b_total * bits + 32) * 3          # 3 transmitting clients
+    assert float(m["uplink_bits"]) == want
+    assert float(measured_uplink_bits(codec, plan.b_total, eff_mask=mask,
+                                      num_clients=G)) == want
+    # the wire size is strictly below the float32 payload it replaces
+    assert want < 32 * plan.b_total * 3
+
+
+def test_uplink_bits_measured_through_run_scan_history():
+    cfg, plan, round_fn, fresh = _safl_setup()
+    codec = CodecConfig(bits=8)
+    params, opt = fresh()
+    wrapped = {"opt": opt, "ef": init_codec_state(codec, G, plan.b_total)}
+    _, _, hist = run_scan(functools.partial(round_fn, codec=codec),
+                          _LinearSampler(), params, wrapped, rounds=3,
+                          key=jax.random.key(4))
+    np.testing.assert_array_equal(np.asarray(hist["uplink_bits"]),
+                                  float((plan.b_total * 8 + 32) * G))
+    assert np.isfinite(hist["loss"]).all()
+
+
+# ---------------------------------------------------------------------------
+# rejection matrix
+# ---------------------------------------------------------------------------
+
+def test_fedopt_rejects_codec():
+    cfg, plan, _, fresh = _safl_setup()
+    with pytest.raises(ValueError, match="no sketch payload"):
+        fedopt_round(cfg, _linear_loss, *fresh(), _round_batch(),
+                     jax.random.key(0), codec=CodecConfig(bits=8))
+
+
+@pytest.mark.parametrize("clip", [False, True])
+def test_codec_with_telemetry_rejected(clip):
+    cfg, plan, _, fresh = _safl_setup(clip=clip)
+    fn = clipped_safl_round if clip else safl_round
+    with pytest.raises(ValueError, match="telemetry"):
+        fn(cfg, _linear_loss, *fresh(), _round_batch(), jax.random.key(0),
+           plan=plan, telemetry=Telemetry(), codec=CodecConfig(bits=8))
+
+
+def test_codec_config_validates_bits():
+    with pytest.raises(AssertionError, match="bits"):
+        CodecConfig(bits=4)

@@ -44,9 +44,10 @@ from repro.core.packed import make_sharded_packing_plan
 from repro.core.safl import SAFLConfig, init_safl
 from repro.core.sketch import SketchConfig
 from repro.data import BigramLMData, LMDataConfig
-from repro.fed import (AsyncConfig, FaultConfig, FaultTable, FixedCohort,
-                       FullParticipation, ImportanceParticipation,
-                       SentinelConfig, UniformParticipation)
+from repro.fed import (AsyncConfig, CodecConfig, FaultConfig, FaultTable,
+                       FixedCohort, FullParticipation,
+                       ImportanceParticipation, SentinelConfig,
+                       UniformParticipation)
 from repro.fed import BYZANTINE as FAULT_BYZ
 from repro.fed import DROP as FAULT_DROP
 from repro.fed import NAN as FAULT_NAN
@@ -310,6 +311,103 @@ def test_mesh_microbatch_hook_combinations_raise():
             train_mod._make_round_core(
                 MODEL, train_mod._fedopt_cfg(cfg), mesh, "cross_silo",
                 microbatch=1)
+
+
+# ---------------------------------------------------------------------------
+# quantized payload codec on the mesh driver (DESIGN §13)
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_mesh_codec_none_is_bitwise_pinned(topology):
+    """``codec=None`` must route at Python level: an explicit None equals
+    the hookless mesh scan bit for bit (no traced neutral quantize)."""
+    mesh, cfg, smp = _mk(topology)
+    key = jax.random.key(42)
+    with use_mesh(mesh):
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology)
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology=topology,
+                                   codec=None)
+    np.testing.assert_array_equal(h1["loss"], h2["loss"])
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(o1, o2)
+
+
+@needs8
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_mesh_codec_runs_finite_with_static_measured_bits(topology):
+    """The shard-sum codec (quantize-before-reduce) trains finite and
+    reports the static measured uplink: payload_bits(b_total) per client
+    shard, every shard transmitting its partial sum each round."""
+    mesh, cfg, smp = _mk(topology)
+    codec = CodecConfig(bits=8, error_feedback=False)
+    key = jax.random.key(42)
+    with use_mesh(mesh):
+        p, o, h = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                rounds=3, key=key, topology=topology,
+                                codec=codec)
+        _, _, plan = train_mod._mesh_plan(MODEL, cfg, mesh, topology)
+    n_shards = 1
+    for ax in train_mod.client_axes_of(mesh, topology):
+        n_shards *= mesh.shape[ax]
+    assert np.isfinite(np.asarray(h["loss"])).all()
+    np.testing.assert_array_equal(
+        np.asarray(h["uplink_bits"]),
+        float(codec.payload_bits(plan.b_total) * n_shards))
+    # quantized trajectory is its own family: it moved vs the exact one
+    _, _, h0 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg), rounds=3,
+                             key=key, topology=topology)
+    assert not np.array_equal(np.asarray(h["loss"]), np.asarray(h0["loss"]))
+
+
+@needs8
+def test_mesh_codec_hook_combinations_raise():
+    """The mesh codec quantizes shard-local partial sums: materialized-row
+    consumers (buffer, guard), telemetry, fedopt, and per-client error
+    feedback all refuse to combine with it (DESIGN §13 hook matrix)."""
+    from repro.obs import Telemetry
+    mesh, cfg, smp = _mk("cross_silo")
+    codec = CodecConfig(bits=8, error_feedback=False)
+    with use_mesh(mesh):
+        with pytest.raises(NotImplementedError, match="codec"):
+            train_mod._make_round_core(MODEL, cfg, mesh, "cross_silo",
+                                       buffer=AsyncConfig(), codec=codec)
+        with pytest.raises(NotImplementedError, match="codec"):
+            train_mod._make_round_core(
+                MODEL, cfg, mesh, "cross_silo",
+                sentinel=SentinelConfig(norm_mult=0.0), codec=codec)
+        with pytest.raises(ValueError, match="telemetry"):
+            train_mod._make_round_core(MODEL, cfg, mesh, "cross_silo",
+                                       telemetry=Telemetry(), codec=codec)
+        with pytest.raises(ValueError, match="no sketch payload"):
+            train_mod._make_round_core(MODEL, train_mod._fedopt_cfg(cfg),
+                                       mesh, "cross_silo", codec=codec)
+        with pytest.raises(ValueError, match="error feedback"):
+            train_mod._make_round_core(MODEL, cfg, mesh, "cross_silo",
+                                       codec=CodecConfig(bits=8))
+
+
+@needs8
+def test_mesh_microbatch_codec_matches_materialized_codec():
+    """Streaming the shard-local fold and quantizing the same partial sum:
+    microbatch >= G_loc with a codec equals the materialized codec round
+    bitwise (same quantizer input, same flat-shard-index RNG)."""
+    mesh, cfg, smp = _mk("cross_silo")
+    codec = CodecConfig(bits=8, error_feedback=False)
+    key = jax.random.key(42)
+    with use_mesh(mesh):
+        p1, o1, h1 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology="cross_silo",
+                                   codec=codec)
+        p2, o2, h2 = run_mesh_scan(MODEL, cfg, mesh, smp, *_fresh(cfg),
+                                   rounds=3, key=key, topology="cross_silo",
+                                   codec=codec, microbatch=64)
+    np.testing.assert_array_equal(np.asarray(h1["loss"]),
+                                  np.asarray(h2["loss"]))
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(o1, o2)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,114 @@
+"""Docs consistency gate (README / ROADMAP / docstrings vs reality).
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two classes of drift, each a CI failure:
+
+* **Dangling DESIGN section references.**  Every ``DESIGN §N`` /
+  ``DESIGN.md §N`` reference in README.md, ROADMAP.md, and the Python
+  sources (src/, examples/, tools/, benchmarks/, tests/) must point at a
+  section that actually exists as a ``## §N ...`` header in DESIGN.md.
+  References to a named appendix (``appendix "..."`` near a DESIGN
+  mention) must match a ``## Appendix: ...`` header.  NOTE the pattern
+  requires the ``DESIGN`` prefix on purpose: bare ``§N`` also names
+  sections of the source PAPER (e.g. "paper §2" in core/clipped.py) and
+  must not be checked against DESIGN.md.
+
+* **Phantom CLI flags.**  Every backticked ``--flag`` token in README.md
+  must be a real ``examples/train_lm.py`` flag (parsed from its
+  ``add_argument`` calls -- the module runs argparse at import, so the
+  SOURCE is the single safely-readable truth) or one of the known
+  benchmark/pytest flags in ``FLAG_ALLOWLIST``.
+
+Exits non-zero listing every failure, so a PR that renumbers DESIGN.md
+or renames a flag cannot leave the front-door docs pointing at nothing.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# flags documented in README that belong to other entry points:
+# benchmarks/run.py's mode flags (it parses sys.argv directly)
+FLAG_ALLOWLIST = {"--quick", "--json", "--guard", "--mesh"}
+
+# requires the DESIGN prefix -- bare "§N" may cite the source paper
+SECTION_REF = re.compile(r"DESIGN(?:\.md)?\s+§§?(\d+)")
+APPENDIX_REF = re.compile(r'appendix\s+"([^"]+)"', re.IGNORECASE)
+
+
+def design_sections(design: str) -> tuple[set[int], set[str]]:
+    nums = {int(m.group(1))
+            for m in re.finditer(r"^## §(\d+)\s", design, re.MULTILINE)}
+    appendices = {m.group(1).strip()
+                  for m in re.finditer(r"^## Appendix:\s*(.+)$", design,
+                                       re.MULTILINE)}
+    return nums, appendices
+
+
+def train_lm_flags() -> set[str]:
+    src = (ROOT / "examples" / "train_lm.py").read_text()
+    return set(re.findall(r'add_argument\(\s*"(--[A-Za-z0-9-]+)"', src))
+
+
+def doc_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    for sub in ("src", "examples", "tools", "benchmarks", "tests"):
+        files.extend(sorted((ROOT / sub).rglob("*.py")))
+    me = pathlib.Path(__file__).resolve()
+    return [f for f in files if f.is_file() and f.resolve() != me]
+
+
+def main() -> int:
+    design = (ROOT / "DESIGN.md").read_text()
+    sections, appendices = design_sections(design)
+    if not sections:
+        print("check_docs: no '## §N' headers found in DESIGN.md")
+        return 1
+
+    fails: list[str] = []
+
+    for f in doc_files():
+        text = f.read_text()
+        rel = f.relative_to(ROOT)
+        for m in SECTION_REF.finditer(text):
+            n = int(m.group(1))
+            if n not in sections:
+                line = text.count("\n", 0, m.start()) + 1
+                fails.append(f"{rel}:{line}: DESIGN §{n} does not exist "
+                             f"(have §{min(sections)}-§{max(sections)})")
+        for m in APPENDIX_REF.finditer(text):
+            name = m.group(1).strip()
+            # only vet names that are plausibly OUR appendix: quoted after
+            # the word 'appendix'; skip if DESIGN.md never had appendices
+            if appendices and name not in appendices:
+                line = text.count("\n", 0, m.start()) + 1
+                fails.append(f'{rel}:{line}: appendix "{name}" not in '
+                             f"DESIGN.md (have: {sorted(appendices)})")
+
+    flags = train_lm_flags() | FLAG_ALLOWLIST
+    readme = (ROOT / "README.md").read_text()
+    for m in re.finditer(r"`([^`\n]+)`", readme):
+        for tok in re.findall(r"--[A-Za-z0-9][A-Za-z0-9_-]*", m.group(1)):
+            if tok not in flags:
+                line = readme.count("\n", 0, m.start()) + 1
+                fails.append(f"README.md:{line}: documented flag {tok} is "
+                             "not a train_lm.py flag (or allowlisted "
+                             "benchmark flag)")
+
+    if fails:
+        print(f"check_docs: {len(fails)} failure(s)")
+        for msg in fails:
+            print("  " + msg)
+        return 1
+    print(f"check_docs: ok ({len(sections)} DESIGN sections, "
+          f"{len(appendices)} appendix(es), {len(flags)} known flags)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
